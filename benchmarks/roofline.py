@@ -1,0 +1,75 @@
+"""§Roofline table: read reports/dryrun/*.json, emit the per-cell
+three-term roofline (compute/memory/collective seconds), dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPs ratio, and MFU-style roofline fraction.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+REPORT_DIR = os.path.join(os.path.dirname(__file__), "..", "reports",
+                          "dryrun")
+
+
+def load(report_dir=None):
+    recs = []
+    for p in sorted(glob.glob(os.path.join(report_dir or REPORT_DIR,
+                                           "*.json"))):
+        with open(p) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def table(recs, mesh="pod16x16"):
+    rows = []
+    for r in recs:
+        if r["mesh"] != mesh:
+            continue
+        rf = r["roofline"]
+        rows.append({
+            "cell": f"{r['arch']}:{r['shape']}",
+            "kind": r["kind"],
+            "t_compute_ms": rf["t_compute_s"] * 1e3,
+            "t_memory_ms": rf["t_memory_s"] * 1e3,
+            "t_collective_ms": rf["t_collective_s"] * 1e3,
+            "dominant": rf["dominant"],
+            "useful": rf["useful_flops_ratio"],
+            "mfu": rf["roofline_fraction_mfu"],
+        })
+    return rows
+
+
+def run(report_dir=None):
+    from benchmarks.common import row
+    recs = load(report_dir)
+    out = []
+    for r in table(recs):
+        out.append(row(
+            f"roofline_{r['cell']}",
+            max(r["t_compute_ms"], r["t_memory_ms"],
+                r["t_collective_ms"]) * 1e3,
+            f"dom={r['dominant']} C={r['t_compute_ms']:.3f}ms "
+            f"M={r['t_memory_ms']:.3f}ms X={r['t_collective_ms']:.3f}ms "
+            f"useful={r['useful']:.2f} mfu={r['mfu']:.3f}"))
+    if not out:
+        print("roofline: no dry-run reports found "
+              "(run python -m repro.launch.dryrun first)")
+    return out
+
+
+def markdown(recs, mesh="pod16x16"):
+    lines = ["| cell | kind | compute | memory | collective | dominant "
+             "| useful F | roofline frac |",
+             "|---|---|---|---|---|---|---|---|"]
+    for r in table(recs, mesh):
+        lines.append(
+            f"| {r['cell']} | {r['kind']} | {r['t_compute_ms']:.3f} ms "
+            f"| {r['t_memory_ms']:.3f} ms | {r['t_collective_ms']:.3f} ms "
+            f"| **{r['dominant']}** | {r['useful']:.2f} "
+            f"| {r['mfu']:.3f} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    run()

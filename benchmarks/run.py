@@ -1,0 +1,39 @@
+"""Benchmark harness entry point: one section per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  fig5_*      — Fig 5a/5b: designs ①②③ vs baselines (latency/throughput)
+  tableI_*    — Table I: per-design resource utilization
+  p_sweep_*   — §III-A spatial-parallelization search curve
+  kernel_*    — kernel-level optimization microbenchmarks
+  roofline_*  — §Roofline terms per (arch × shape) from the dry-run
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import (design_points, kernels_bench,
+                            parallelization_sweep, resource_table,
+                            roofline)
+    print("name,us_per_call,derived")
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    sections = {
+        "design_points": lambda: (design_points.run("upgrade"),
+                                  design_points.run("current")),
+        "resource_table": resource_table.run,
+        "parallelization_sweep": parallelization_sweep.run,
+        "kernels": kernels_bench.run,
+        "roofline": roofline.run,
+    }
+    for name, fn in sections.items():
+        if only and only != name:
+            continue
+        try:
+            fn()
+        except Exception as e:  # report and continue
+            print(f"{name},nan,ERROR {e!r}")
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,22 @@
+"""Real-time trigger serving demo (the paper's end-to-end demonstrator):
+deployment flow -> compiled pipeline -> streaming engine with strict
+in-order completion, micro-batching deadline, and an event-display JSON
+(the interactive-visualization analogue).
+
+    PYTHONPATH=src python examples/serve_trigger.py
+"""
+import sys
+
+from repro.launch import serve
+
+
+def main():
+    sys.argv = [sys.argv[0], "--detector", "current", "--design-point",
+                "3", "--events", "256", "--train-steps", "200",
+                "--event-display", "/tmp/event_display.json"] \
+        + sys.argv[1:]
+    serve.main()
+
+
+if __name__ == "__main__":
+    main()

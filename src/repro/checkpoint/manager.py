@@ -1,0 +1,148 @@
+"""Fault-tolerant checkpointing: async, atomic, elastic.
+
+- Leaves are written as .npy files + a JSON manifest (tree paths, shapes,
+  dtypes, crc32 checksums, step). Writes go to ``<dir>.tmp`` and are
+  committed by an atomic rename — a crash mid-write never corrupts the
+  latest checkpoint.
+- ``async_=True`` snapshots to host memory synchronously (cheap) and does
+  file I/O on a background thread, keeping checkpointing off the step
+  critical path.
+- ``restore(..., mesh, specs)`` re-shards onto ANY mesh (elastic scaling:
+  leaves are stored unsharded/global, so a 512-chip checkpoint restores
+  onto 256 chips or 1 CPU without conversion).
+- ``CheckpointManager`` rotates the last ``keep`` checkpoints and verifies
+  checksums on restore (detects partial/bit-rotten files).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import zlib
+
+import jax
+import numpy as np
+
+
+def _paths(tree):
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in leaves:
+        parts = []
+        for p in path:
+            key = getattr(p, "key", getattr(p, "idx", getattr(p, "name",
+                                                              None)))
+            parts.append(str(key))
+        out.append(("/".join(parts), leaf))
+    return out
+
+
+def save(ckpt_dir: str, step: int, tree, *, async_: bool = False):
+    """Write one checkpoint at <ckpt_dir>/step_<step>."""
+    entries = _paths(tree)
+    host = [(name, np.asarray(leaf)) for name, leaf in entries]
+
+    def _write():
+        final = os.path.join(ckpt_dir, f"step_{step:08d}")
+        tmp = final + ".tmp"
+        os.makedirs(tmp, exist_ok=True)
+        manifest = {"step": step, "leaves": []}
+        for i, (name, arr) in enumerate(host):
+            fn = f"leaf_{i:05d}.npy"
+            np.save(os.path.join(tmp, fn), arr)
+            manifest["leaves"].append({
+                "path": name, "file": fn, "shape": list(arr.shape),
+                "dtype": str(arr.dtype),
+                "crc": zlib.crc32(np.ascontiguousarray(arr).tobytes()),
+            })
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+
+    if async_:
+        t = threading.Thread(target=_write, daemon=True)
+        t.start()
+        return t
+    _write()
+    return None
+
+
+def latest_step(ckpt_dir: str):
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+             if d.startswith("step_") and not d.endswith(".tmp")]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, step: int, like_tree, *, mesh=None,
+            shardings=None, verify: bool = True):
+    """Load checkpoint ``step`` shaped like ``like_tree`` (any pytree with
+    the same structure; leaves may be ShapeDtypeStructs). If ``mesh`` and
+    ``shardings`` (a matching pytree of NamedSharding/PartitionSpec) are
+    given, leaves are device_put with those shardings (elastic restore)."""
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    by_path = {e["path"]: e for e in manifest["leaves"]}
+    names = [n for n, _ in _paths(like_tree)]
+    flat_like, tdef = jax.tree_util.tree_flatten(like_tree)
+    shard_flat = (tdef.flatten_up_to(shardings)
+                  if shardings is not None else [None] * len(flat_like))
+    out = []
+    for name, like, shd in zip(names, flat_like, shard_flat):
+        e = by_path[name]
+        arr = np.load(os.path.join(d, e["file"]))
+        if verify:
+            crc = zlib.crc32(np.ascontiguousarray(arr).tobytes())
+            if crc != e["crc"]:
+                raise IOError(f"checksum mismatch for {name} in {d}")
+        if shd is not None:
+            if mesh is not None and not hasattr(shd, "mesh"):
+                shd = jax.sharding.NamedSharding(mesh, shd)
+            arr = jax.device_put(arr, shd)
+        out.append(arr)
+    return jax.tree_util.tree_unflatten(tdef, out), manifest["step"]
+
+
+class CheckpointManager:
+    def __init__(self, ckpt_dir: str, *, keep: int = 3,
+                 async_: bool = True):
+        self.dir = ckpt_dir
+        self.keep = keep
+        self.async_ = async_
+        self._pending: threading.Thread | None = None
+        os.makedirs(ckpt_dir, exist_ok=True)
+
+    def save(self, step: int, tree):
+        self.wait()
+        self._pending = save(self.dir, step, tree, async_=self.async_)
+        if not self.async_:
+            self._gc()
+
+    def wait(self):
+        if self._pending is not None:
+            self._pending.join()
+            self._pending = None
+            self._gc()
+
+    def _gc(self):
+        steps = sorted(int(d.split("_")[1]) for d in os.listdir(self.dir)
+                       if d.startswith("step_") and not d.endswith(".tmp"))
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    def latest(self):
+        return latest_step(self.dir)
+
+    def restore_latest(self, like_tree, *, mesh=None, shardings=None):
+        self.wait()
+        s = self.latest()
+        if s is None:
+            return None, None
+        return restore(self.dir, s, like_tree, mesh=mesh,
+                       shardings=shardings)

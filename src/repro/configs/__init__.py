@@ -1,0 +1,36 @@
+"""Architecture registry: ``--arch <id>`` resolution for launchers,
+benchmarks and tests. 10 assigned archs + the paper's own."""
+from __future__ import annotations
+
+import importlib
+
+_MODULES = {
+    "yi-9b": "repro.configs.yi_9b",
+    "granite-34b": "repro.configs.granite_34b",
+    "olmo-1b": "repro.configs.olmo_1b",
+    "granite-moe-1b-a400m": "repro.configs.granite_moe_1b_a400m",
+    "llama4-maverick-400b-a17b": "repro.configs.llama4_maverick_400b_a17b",
+    "dimenet": "repro.configs.dimenet",
+    "gatedgcn": "repro.configs.gatedgcn",
+    "graphsage-reddit": "repro.configs.graphsage_reddit",
+    "nequip": "repro.configs.nequip",
+    "mind": "repro.configs.mind",
+    "caloclusternet": "repro.configs.caloclusternet",
+}
+
+ASSIGNED = [a for a in _MODULES if a != "caloclusternet"]
+
+
+def get_arch(arch_id: str):
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; have {list(_MODULES)}")
+    return importlib.import_module(_MODULES[arch_id])
+
+
+def all_cells(include_paper: bool = False):
+    """Yield every (arch, shape) Cell — 40 assigned (+3 paper)."""
+    ids = list(ASSIGNED) + (["caloclusternet"] if include_paper else [])
+    for arch_id in ids:
+        mod = get_arch(arch_id)
+        for shape in mod.SHAPES:
+            yield arch_id, shape, mod

@@ -1,0 +1,72 @@
+"""Cell abstraction: one (architecture × input-shape) dry-run unit.
+
+Every config module exposes ``cell(shape_name) -> Cell``; the launcher
+lowers ``jit(make_step(mesh), in_shardings=resolve(spec_args))`` against
+``abstract_args()`` (pure ShapeDtypeStructs — nothing is allocated).
+``model_flops`` is the analytic useful-FLOPs estimate used for the
+MODEL_FLOPS / HLO_FLOPs ratio in §Roofline.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.dist.sharding import logical_to_physical
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: str
+    kind: str                                  # train|prefill|decode|serve
+    make_step: Callable[[Any], Callable]       # mesh -> step fn
+    abstract_args: Callable[[], tuple]         # () -> pytree of SDS
+    spec_args: Callable[[], tuple]             # () -> pytree of logical P
+    model_flops: float = 0.0
+    sublowerings: Callable | None = None       # for scan-corrected costs
+
+    @property
+    def name(self):
+        return f"{self.arch}:{self.shape}"
+
+    def resolve_shardings(self, mesh):
+        """Logical specs -> NamedShardings, sanitized against the actual
+        argument shapes: pjit input shardings must divide dimensions
+        exactly, so axes whose mesh extent does not divide the dim are
+        dropped (e.g. vocab=49155 vs tp=16, d_in=1433 vs dp), and specs
+        are truncated to the value rank."""
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+        def extent(entry):
+            if entry is None:
+                return 1
+            names = entry if isinstance(entry, (tuple, list)) else (entry,)
+            n = 1
+            for nm in names:
+                n *= sizes[nm]
+            return n
+
+        def fix(spec, arg):
+            phys = list(logical_to_physical(spec, mesh))[:len(arg.shape)]
+            out = []
+            for i, e in enumerate(phys):
+                out.append(e if e is None
+                           or arg.shape[i] % extent(e) == 0 else None)
+            return NamedSharding(mesh, P(*out))
+
+        return jax.tree_util.tree_map(
+            fix, self.spec_args(), self.abstract_args(),
+            is_leaf=lambda x: isinstance(x, P))
+
+    def lower(self, mesh):
+        step = self.make_step(mesh)
+        shardings = self.resolve_shardings(mesh)
+        return jax.jit(step, in_shardings=shardings).lower(
+            *self.abstract_args())
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)

@@ -1,0 +1,155 @@
+"""caloclusternet [trigger] — the paper's own architecture.
+
+Variants: 'upgrade' (128 of 8736 inputs — the paper's target) and
+'current' (32 of 576 — the deployed detector). Shapes: trigger_serve
+(streaming inference, the hardware-trigger path incl. CPS) and
+condensation_train (object-condensation training)."""
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import Cell, sds
+from repro.core import caloclusternet as ccn
+from repro.core.condensation import condensation_loss
+from repro.dist.sharding import DP, specs_from_rules
+from repro.optim import AdamWConfig, adamw_init, adamw_update, cosine_warmup
+from repro.optim.adamw import opt_state_specs
+
+ARCH_ID = "caloclusternet"
+FAMILY = "trigger"
+SHAPES = ["trigger_serve", "trigger_serve_current", "condensation_train"]
+
+_META = {
+    "trigger_serve": {"kind": "serve", "batch": 4096, "variant": "upgrade"},
+    "trigger_serve_current": {"kind": "serve", "batch": 4096,
+                              "variant": "current"},
+    "condensation_train": {"kind": "train", "batch": 1024,
+                           "variant": "upgrade"},
+}
+
+PARAM_RULES = [(r".*/w", P(DP, None))]
+OCFG = AdamWConfig(weight_decay=0.01)
+LR = cosine_warmup(peak_lr=1e-3, warmup_steps=200, total_steps=20000)
+
+
+def full_config(variant="upgrade"):
+    if variant == "current":
+        return ccn.current_detector_config()
+    return ccn.CCNConfig()
+
+
+def smoke_config():
+    return ccn.CCNConfig(n_hits=16, n_crystals=576, d_hidden=24,
+                         d_flr=8, d_s=3, k=4, d_decoder=12)
+
+
+def _flops(cfg, b):
+    n, d = cfg.n_hits, cfg.d_hidden
+    per_ev = (2 * n * (cfg.d_in * d + d * d)               # encoder
+              + cfg.n_gravnet_blocks * (
+                  2 * n * d * (cfg.d_s + cfg.d_flr)
+                  + 2 * n * n * (cfg.d_s + cfg.k * cfg.d_flr)
+                  + 2 * n * (d + 2 * cfg.d_flr) * d)
+              + 2 * n * (d * d + d * cfg.d_decoder)
+              + 2 * n * cfg.d_decoder * sum(cfg.head_dims.values()))
+    return per_ev * b
+
+
+def cell(shape):
+    meta = _META[shape]
+    cfg = full_config(meta["variant"])
+    b = meta["batch"]
+    if meta["kind"] == "serve":
+        return _serve_cell(cfg, shape, b)
+    return _train_cell(cfg, shape, b)
+
+
+def _feeds(cfg, b, train=False):
+    f = {"feats": sds((b, cfg.n_hits, cfg.d_in), jnp.float32),
+         "mask": sds((b, cfg.n_hits), jnp.float32)}
+    if train:
+        f["object_id"] = sds((b, cfg.n_hits), jnp.int32)
+        f["energy"] = sds((b, cfg.n_hits), jnp.float32)
+        f["cls"] = sds((b, cfg.n_hits), jnp.int32)
+    return f
+
+
+def _feed_specs(fd):
+    return {k: P(DP, *([None] * (len(v.shape) - 1)))
+            for k, v in fd.items()}
+
+
+def _serve_cell(cfg, shape, b):
+    def make_step(mesh):
+        def step(params, batch):
+            out = ccn.apply(params, batch["feats"], batch["mask"], cfg)
+            return ccn.cps(out, batch["mask"], cfg)
+        return step
+
+    def abstract_args():
+        params = jax.eval_shape(
+            lambda: ccn.init(jax.random.PRNGKey(0), cfg))
+        return (params, _feeds(cfg, b))
+
+    def spec_args():
+        params = jax.eval_shape(
+            lambda: ccn.init(jax.random.PRNGKey(0), cfg))
+        return (specs_from_rules(params, PARAM_RULES),
+                _feed_specs(_feeds(cfg, b)))
+
+    return Cell(arch=ARCH_ID, shape=shape, kind="serve",
+                make_step=make_step, abstract_args=abstract_args,
+                spec_args=spec_args, model_flops=_flops(cfg, b))
+
+
+def _train_cell(cfg, shape, b):
+    def make_step(mesh):
+        def step(params, opt_state, batch):
+            def lf(p):
+                out = ccn.apply(p, batch["feats"], batch["mask"], cfg)
+                labels = {"object_id": batch["object_id"],
+                          "energy": batch["energy"], "cls": batch["cls"]}
+                return condensation_loss(out, labels, batch["mask"],
+                                         k_max=cfg.k_max)
+            (loss, metrics), grads = jax.value_and_grad(
+                lf, has_aux=True)(params)
+            new_p, new_s, aux = adamw_update(
+                grads, opt_state, params, lr=LR(opt_state["step"]),
+                cfg=OCFG)
+            return new_p, new_s, {**metrics, **aux}
+        return step
+
+    def abstract_args():
+        params = jax.eval_shape(
+            lambda: ccn.init(jax.random.PRNGKey(0), cfg))
+        opt = jax.eval_shape(lambda p: adamw_init(p, OCFG), params)
+        return (params, opt, _feeds(cfg, b, train=True))
+
+    def spec_args():
+        params = jax.eval_shape(
+            lambda: ccn.init(jax.random.PRNGKey(0), cfg))
+        pspecs = specs_from_rules(params, PARAM_RULES)
+        return (pspecs, opt_state_specs(pspecs, OCFG),
+                _feed_specs(_feeds(cfg, b, train=True)))
+
+    return Cell(arch=ARCH_ID, shape=shape, kind="train",
+                make_step=make_step, abstract_args=abstract_args,
+                spec_args=spec_args, model_flops=_flops(cfg, b) * 3)
+
+
+def smoke_run(seed=0):
+    from repro.data.belle2 import Belle2Config, generate
+    cfg = smoke_config()
+    gen = Belle2Config(n_crystals=576, grid=(24, 24), n_hits=cfg.n_hits,
+                       noise_rate=4.0)
+    b = generate(gen, 8, seed=seed)
+    params = ccn.init(jax.random.PRNGKey(seed), cfg)
+    feats = jnp.asarray(b["feats"])
+    mask = jnp.asarray(b["mask"])
+    out = ccn.apply(params, feats, mask, cfg)
+    labels = {"object_id": jnp.asarray(b["object_id"]),
+              "energy": jnp.asarray(b["energy"]),
+              "cls": jnp.asarray(b["cls"])}
+    loss, m = condensation_loss(out, labels, mask, k_max=cfg.k_max)
+    res = ccn.cps(out, mask, cfg)
+    return {"loss": loss, "cps": res, "out": out, "metrics": m}

@@ -1,0 +1,70 @@
+"""gatedgcn [gnn]: n_layers=16 d_hidden=70 aggregator=gated
+[arXiv:2003.00982; paper]."""
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.configs import gnn_common as G
+from repro.configs.base import sds
+from repro.models.gnn import gatedgcn as model
+
+ARCH_ID = "gatedgcn"
+FAMILY = "gnn"
+SHAPES = list(G.SHAPES)
+
+
+def full_config(shape="full_graph_sm"):
+    meta = G.SHAPES[shape]
+    return model.GatedGCNConfig(
+        n_layers=16, d_hidden=70, d_in=meta["d_feat"],
+        n_classes=max(meta["classes"], 2),
+        readout="graph" if shape == "molecule" else "node")
+
+
+def smoke_config():
+    return model.GatedGCNConfig(n_layers=2, d_hidden=16, d_in=8,
+                                n_classes=3)
+
+
+def _flops(meta, cfg):
+    n, e = meta["n"], meta["e"]
+    d = cfg.d_hidden
+    per_layer = 2.0 * d * d * (4 * e + n) + 10.0 * e * d
+    emb = 2.0 * n * cfg.d_in * d
+    return 3.0 * (cfg.n_layers * per_layer + emb)  # fwd+bwd
+
+
+def cell(shape):
+    meta = G.SHAPES[shape]
+    cfg = full_config(shape)
+    if shape == "molecule":
+        b = meta["batch"]
+        g = G.graph_sds(meta, geometric=False, triplets=False, batch=b)
+        g["labels"] = sds((b,), jnp.int32)  # graph-level labels
+        specs = G.graph_specs(g, batch=True)
+        return G.make_batched_train_cell(
+            ARCH_ID, model, cfg, g, specs,
+            model_flops=_flops(meta, cfg) * b)
+
+    g = G.graph_sds(meta, geometric=False, triplets=False)
+    specs = G.graph_specs(g, edge_dp=True)
+    return G.make_train_cell(ARCH_ID, shape, model, cfg, g, specs,
+                             model_flops=_flops(meta, cfg))
+
+
+def smoke_run(seed=0):
+    import jax
+    import numpy as np
+    from repro.data.graphs import powerlaw_graph
+    from repro.optim import AdamWConfig, adamw_init, adamw_update
+    cfg = smoke_config()
+    gg = powerlaw_graph(32, 96, d_feat=8, n_classes=3, seed=seed)
+    g = {k: jnp.asarray(v) for k, v in gg.items()}
+    p = model.init(jax.random.PRNGKey(seed), cfg)
+    ocfg = AdamWConfig()
+    s = adamw_init(p, ocfg)
+    (loss, m), grads = jax.value_and_grad(
+        lambda q: model.loss_fn(q, g, cfg), has_aux=True)(p)
+    p2, s, _ = adamw_update(grads, s, p, lr=1e-3, cfg=ocfg)
+    logits = model.apply(p2, g, cfg)
+    return {"loss": loss, "logits": logits, "metrics": m}

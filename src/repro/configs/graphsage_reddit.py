@@ -1,0 +1,138 @@
+"""graphsage-reddit [gnn]: n_layers=2 d_hidden=128 aggregator=mean
+sample_sizes=25-10 [arXiv:1706.02216; paper].
+
+minibatch_lg uses the REAL layered neighbor sampler
+(repro.data.graphs.NeighborSampler) with the assigned fanout 15-10,
+grouped 32×32 seeds so the group axis shards over dp."""
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import gnn_common as G
+from repro.configs.base import Cell, sds
+from repro.dist.sharding import DP, specs_from_rules
+from repro.models.gnn import graphsage as model
+from repro.optim import adamw_init, adamw_update
+from repro.optim.adamw import opt_state_specs
+
+ARCH_ID = "graphsage-reddit"
+FAMILY = "gnn"
+SHAPES = list(G.SHAPES)
+
+
+def full_config(shape="full_graph_sm"):
+    meta = G.SHAPES[shape]
+    fanout = meta.get("fanout", (25, 10))
+    return model.GraphSAGEConfig(
+        n_layers=2, d_hidden=128, d_in=meta["d_feat"],
+        n_classes=max(meta["classes"], 2), sample_sizes=fanout)
+
+
+def smoke_config():
+    return model.GraphSAGEConfig(n_layers=2, d_hidden=16, d_in=8,
+                                 n_classes=3, sample_sizes=(3, 2))
+
+
+def _flops(meta, cfg, n=None):
+    n = n or meta["n"]
+    d = cfg.d_hidden
+    fl = 2.0 * n * 2 * meta["d_feat"] * d + 2.0 * n * 2 * d * d
+    return 3.0 * fl
+
+
+def _flops_sampled(meta, cfg, groups, seeds):
+    """Layered-frontier work: layer l transforms frontiers 0..depth-l."""
+    d = cfg.d_hidden
+    sizes = model.cfg_frontier_sizes(cfg, seeds)
+    fl = 0.0
+    din = meta["d_feat"]
+    for li in range(cfg.n_layers):
+        # frontiers 0..depth-1 are transformed at layer li
+        depth = len(sizes) - 1 - li
+        active = sum(sizes[:depth])
+        fl += 2.0 * active * 2 * din * d
+        din = d
+    return 3.0 * groups * fl
+
+
+def cell(shape):
+    meta = G.SHAPES[shape]
+    cfg = full_config(shape)
+    if shape == "minibatch_lg":
+        return _sampled_cell(cfg, meta)
+    if shape == "molecule":
+        b = meta["batch"]
+        g = G.graph_sds(meta, geometric=False, triplets=False, batch=b)
+        specs = G.graph_specs(g, batch=True)
+        return G.make_batched_train_cell(
+            ARCH_ID, model, cfg, g, specs,
+            model_flops=_flops(meta, cfg) * b)
+    g = G.graph_sds(meta, geometric=False, triplets=False)
+    specs = G.graph_specs(g, edge_dp=True)
+    return G.make_train_cell(ARCH_ID, shape, model, cfg, g, specs,
+                             model_flops=_flops(meta, cfg))
+
+
+def _sampled_cell(cfg, meta):
+    groups, seeds = G.GROUPS, G.SEEDS_PER_GROUP
+    sizes = model.cfg_frontier_sizes(cfg, seeds)     # (32, 480, 4800)
+    ntot = sum(sizes)
+
+    def abstract_args():
+        params = jax.eval_shape(
+            lambda: model.init(jax.random.PRNGKey(0), cfg))
+        opt = jax.eval_shape(lambda p: adamw_init(p, G.OCFG), params)
+        batch = {
+            "feats": sds((groups, ntot, cfg.d_in), jnp.float32),
+            "edges": [sds((groups, 2, sizes[i] * cfg.sample_sizes[i]),
+                          jnp.int32) for i in range(len(sizes) - 1)],
+            "labels": sds((groups, seeds), jnp.int32),
+        }
+        return (params, opt, batch)
+
+    def spec_args():
+        params = jax.eval_shape(
+            lambda: model.init(jax.random.PRNGKey(0), cfg))
+        pspecs = specs_from_rules(params, model.PARAM_RULES)
+        ospecs = opt_state_specs(pspecs, G.OCFG)
+        bspecs = {"feats": P(DP, None, None),
+                  "edges": [P(DP, None, None)] * (len(sizes) - 1),
+                  "labels": P(DP, None)}
+        return (pspecs, ospecs, bspecs)
+
+    def make_step(mesh):
+        def step(params, opt_state, batch):
+            def lf(p):
+                losses, metrics = jax.vmap(lambda b: model.loss_fn(
+                    p, b, cfg, sampled=True))(batch)
+                return losses.mean(), {k: v.mean()
+                                       for k, v in metrics.items()}
+            (loss, metrics), grads = jax.value_and_grad(
+                lf, has_aux=True)(params)
+            new_p, new_s, aux = adamw_update(
+                grads, opt_state, params,
+                lr=G.LR(opt_state["step"]), cfg=G.OCFG)
+            return new_p, new_s, {**metrics, **aux}
+        return step
+
+    mf = _flops_sampled(meta, cfg, groups, seeds)
+    return Cell(arch=ARCH_ID, shape="minibatch_lg", kind="train",
+                make_step=make_step, abstract_args=abstract_args,
+                spec_args=spec_args, model_flops=mf)
+
+
+def smoke_run(seed=0):
+    import numpy as np
+    from repro.data.graphs import NeighborSampler, powerlaw_graph
+    cfg = smoke_config()
+    gg = powerlaw_graph(64, 256, d_feat=8, n_classes=3, seed=seed)
+    sampler = NeighborSampler(gg["edge_index"], 64, gg["nodes"],
+                              gg["labels"], fanouts=cfg.sample_sizes,
+                              seed=seed)
+    batch = sampler.sample(np.arange(8))
+    batch = jax.tree_util.tree_map(jnp.asarray, batch)
+    p = model.init(jax.random.PRNGKey(seed), cfg)
+    loss, m = model.loss_fn(p, batch, cfg, sampled=True)
+    g = {k: jnp.asarray(v) for k, v in gg.items()}
+    loss_full, _ = model.loss_fn(p, g, cfg)
+    return {"loss": loss, "loss_full": loss_full, "metrics": m}

@@ -1,0 +1,246 @@
+"""Shared cell builders for the five LM architectures.
+
+Shapes (assigned): train_4k (train, S=4096 B=256), prefill_32k
+(inference prefill, S=32768 B=32), decode_32k (one token against a 32k KV
+cache, B=128), long_500k (one token against a 524288 KV cache, B=1,
+sequence-sharded cache — flash-decoding-style; decode is O(S), so this is
+runnable for full-attention archs, see DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import Cell, sds
+from repro.dist.sharding import DP, TP, specs_from_rules
+from repro.models import transformer as tr
+from repro.optim import AdamWConfig, adamw_init, adamw_update, cosine_warmup
+from repro.optim.adamw import opt_state_specs
+
+SHAPES = {
+    "train_4k": {"kind": "train", "seq": 4096, "batch": 256},
+    "prefill_32k": {"kind": "prefill", "seq": 32768, "batch": 32},
+    "decode_32k": {"kind": "decode", "seq": 32768, "batch": 128},
+    "long_500k": {"kind": "decode", "seq": 524288, "batch": 1,
+                  "seq_shard": True},
+}
+
+
+def opt_config(cfg: tr.TransformerConfig, *, quantize: bool):
+    return AdamWConfig(quantize_states=quantize)
+
+
+def _param_trees(cfg):
+    params = tr.abstract_params(cfg)
+    pspecs = specs_from_rules(params, tr.PARAM_RULES)
+    return params, pspecs
+
+
+def train_cell(arch: str, cfg: tr.TransformerConfig, *, quantize_opt=False,
+               batch=None, seq=None, grad_accum: int = 1,
+               shape_name: str = "train_4k"):
+    meta = SHAPES["train_4k"]
+    b = batch or meta["batch"]
+    s = seq or meta["seq"]
+    ocfg = opt_config(cfg, quantize=quantize_opt)
+    lr = cosine_warmup(peak_lr=3e-4, warmup_steps=100, total_steps=10000)
+
+    def make_step(mesh):
+        def grads_of(params, batch_):
+            return jax.value_and_grad(tr.loss_fn, has_aux=True)(
+                params, batch_, cfg, mesh)
+
+        def step(params, opt_state, batch_):
+            if grad_accum > 1:
+                mb = {k: v.reshape(grad_accum, b // grad_accum, s)
+                      for k, v in batch_.items()}
+
+                def acc(carry, mbatch):
+                    (loss, metrics), grads = grads_of(params, mbatch)
+                    carry = jax.tree_util.tree_map(
+                        lambda a, g: a + g / grad_accum, carry, grads)
+                    return carry, (loss, metrics)
+
+                zero = jax.tree_util.tree_map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params)
+                grads, (losses, ms) = jax.lax.scan(acc, zero, mb)
+                loss = losses.mean()
+                metrics = jax.tree_util.tree_map(lambda x: x.mean(), ms)
+            else:
+                (loss, metrics), grads = grads_of(params, batch_)
+            new_p, new_s, aux = adamw_update(
+                grads, opt_state, params,
+                lr=lr(opt_state["step"]), cfg=ocfg)
+            return new_p, new_s, {**metrics, **aux, "loss": loss}
+        return step
+
+    def abstract_args():
+        params, _ = _param_trees(cfg)
+        opt = jax.eval_shape(lambda p: adamw_init(p, ocfg), params)
+        batch_ = {"tokens": sds((b, s), jnp.int32),
+                  "labels": sds((b, s), jnp.int32)}
+        return (params, opt, batch_)
+
+    def spec_args():
+        _, pspecs = _param_trees(cfg)
+        ospecs = opt_state_specs(pspecs, ocfg)
+        bspecs = {"tokens": P(DP, None), "labels": P(DP, None)}
+        return (pspecs, ospecs, bspecs)
+
+    return Cell(arch=arch, shape=shape_name, kind="train",
+                make_step=make_step, abstract_args=abstract_args,
+                spec_args=spec_args,
+                model_flops=tr.model_flops(cfg, b, s, training=True))
+
+
+def _serving_specs(pspecs):
+    """Inference param layout: TP-only (dp replicated) — kills the
+    per-step FSDP all-gathers that dominate decode (§Perf)."""
+    def drop_dp(spec):
+        return P(*[None if e == DP
+                   else (tuple(x for x in e if x != DP) or None
+                         if isinstance(e, tuple) else e)
+                   for e in spec])
+    return jax.tree_util.tree_map(drop_dp, pspecs,
+                                  is_leaf=lambda x: isinstance(x, P))
+
+
+def prefill_cell(arch: str, cfg: tr.TransformerConfig, *,
+                 serving_shardings: bool = False):
+    meta = SHAPES["prefill_32k"]
+    b, s = meta["batch"], meta["seq"]
+
+    def make_step(mesh):
+        def step(params, tokens):
+            return tr.prefill(params, tokens, cfg, mesh)
+        return step
+
+    def abstract_args():
+        params, _ = _param_trees(cfg)
+        return (params, sds((b, s), jnp.int32))
+
+    def spec_args():
+        _, pspecs = _param_trees(cfg)
+        if serving_shardings:
+            pspecs = _serving_specs(pspecs)
+        return (pspecs, P(DP, None))
+
+    return Cell(arch=arch, shape="prefill_32k", kind="prefill",
+                make_step=make_step, abstract_args=abstract_args,
+                spec_args=spec_args,
+                model_flops=tr.model_flops(cfg, b, s, training=False))
+
+
+def decode_cell(arch: str, cfg: tr.TransformerConfig, shape: str, *,
+                serving_shardings: bool = False):
+    meta = SHAPES[shape]
+    b, s = meta["batch"], meta["seq"]
+    seq_shard = meta.get("seq_shard", False)
+
+    def make_step(mesh):
+        def step(params, cache, tokens):
+            return tr.decode_step(params, cache, tokens, cfg, mesh)
+        return step
+
+    def abstract_args():
+        params, _ = _param_trees(cfg)
+        cache = jax.eval_shape(
+            lambda: tr.init_cache(cfg, b, s))
+        return (params, cache, sds((b, 1), jnp.int32))
+
+    def spec_args():
+        _, pspecs = _param_trees(cfg)
+        if serving_shardings:
+            pspecs = _serving_specs(pspecs)
+        # kv-head counts are rarely divisible by tp=16; shard d_head
+        kvspec = (P(None, None, DP, None, TP) if seq_shard
+                  else P(None, DP, None, None, TP))
+        scspec = (P(None, None, DP, None) if seq_shard
+                  else P(None, DP, None, None))
+
+        def cspec(leaf):
+            if leaf.ndim == 5:
+                return kvspec
+            if leaf.ndim == 4:
+                return scspec
+            return P(None, None)
+
+        cache = jax.eval_shape(lambda: tr.init_cache(cfg, b, s))
+        cspecs = jax.tree_util.tree_map(cspec, cache)
+        tokspec = P() if b == 1 else P(DP, None)
+        return (pspecs, cspecs, tokspec)
+
+    # decode: one token, attention reads the full cache
+    mf = tr.model_flops(cfg, b, 1, training=False, decode=True, kv_len=s)
+    return Cell(arch=arch, shape=shape, kind="decode",
+                make_step=make_step, abstract_args=abstract_args,
+                spec_args=spec_args, model_flops=mf)
+
+
+def cells_for(arch: str, cfg: tr.TransformerConfig, *, quantize_opt=False,
+              serving_shardings=False, grad_accum=1):
+    return {
+        "train_4k": lambda: train_cell(arch, cfg,
+                                       quantize_opt=quantize_opt,
+                                       grad_accum=grad_accum),
+        "prefill_32k": lambda: prefill_cell(
+            arch, cfg, serving_shardings=serving_shardings),
+        "decode_32k": lambda: decode_cell(
+            arch, cfg, "decode_32k", serving_shardings=serving_shardings),
+        "long_500k": lambda: decode_cell(
+            arch, cfg, "long_500k", serving_shardings=serving_shardings),
+    }
+
+
+# ------------------------------------------------- cost (roofline) cells ----
+def _cost_cfg(cfg: tr.TransformerConfig, n_layers: int):
+    """Scan-free-cost variant: XLA's cost_analysis counts scan bodies
+    once, so roofline lowerings (a) drop the attention q-chunk scan
+    ('full' mode — identical FLOPs, no loop), (b) disable loss chunking,
+    (c) vmap MoE groups, (d) use reduced n_layers ∈ {2,4} — the layer
+    scan is corrected by affine extrapolation F(L) = a + b·L (see
+    benchmarks/roofline.py). Memory comes from the full-L deploy
+    lowering, not from these."""
+    kw = dict(cfg.__dict__)
+    # keep remat as deployed: recompute FLOPs are real roofline cost
+    kw.update(n_layers=n_layers, attn_mode="full", loss_chunk=1 << 30,
+              unroll_layers=True)
+    if cfg.moe is not None:
+        mkw = dict(cfg.moe.__dict__)
+        mkw.update(vmap_groups=True)
+        kw["moe"] = tr.MoEConfig(**mkw)
+    return tr.TransformerConfig(**kw)
+
+
+def cost_cells(arch: str, cfg: tr.TransformerConfig, shape: str, *,
+               quantize_opt=False, **cell_kwargs):
+    """Two reduced-L cells + the true L, for affine FLOP extrapolation."""
+    out = {}
+    for lred in (2, 4):
+        c2 = _cost_cfg(cfg, lred)
+        builder = cells_for(arch, c2, quantize_opt=quantize_opt,
+                            **cell_kwargs)[shape]
+        out[lred] = builder()
+    return out, cfg.n_layers
+
+
+# --------------------------------------------------------------- smoke ----
+def smoke_lm(cfg_small: tr.TransformerConfig, seed=0):
+    """One real train step + one decode step on CPU at reduced scale."""
+    key = jax.random.PRNGKey(seed)
+    params = tr.init_params(key, cfg_small)
+    toks = jax.random.randint(key, (2, 16), 0, cfg_small.vocab)
+    batch = {"tokens": toks, "labels": jnp.roll(toks, -1, 1)}
+    ocfg = AdamWConfig()
+    opt = adamw_init(params, ocfg)
+    (loss, metrics), grads = jax.value_and_grad(
+        tr.loss_fn, has_aux=True)(params, batch, cfg_small, None)
+    params2, opt2, _ = adamw_update(grads, opt, params, lr=1e-3, cfg=ocfg)
+    cache = tr.init_cache(cfg_small, 2, 24, dtype=jnp.float32)
+    logits, cache = tr.decode_step(params2, cache, toks[:, :1], cfg_small)
+    return {"loss": loss, "logits": logits,
+            "params_delta": jax.tree_util.tree_reduce(
+                lambda a, x: a + float(jnp.sum(jnp.abs(x))),
+                jax.tree_util.tree_map(lambda a, b_: a - b_, params2,
+                                       params), 0.0)}

@@ -1,0 +1,8 @@
+"""The paper's primary contribution: a semi-automated deployment flow
+(operator fusion -> partitioning -> mapping -> spatial parallelization ->
+kernel-level optimization) for real-time dynamic-GNN trigger inference,
+plus CaloClusterNet itself and the object-condensation machinery."""
+from repro.core.graph_ir import Graph, Operator
+from repro.core.passes.parallelize import Requirements
+from repro.core.pipeline import CompiledPipeline, deploy
+from repro.core import caloclusternet, condensation, quantization

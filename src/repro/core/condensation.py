@@ -1,0 +1,90 @@
+"""Object-condensation loss (Kieseler, arXiv:2002.03605) for CaloClusterNet.
+
+Per-hit labels: ``object_id`` ∈ {-1 (noise), 0..K-1} and per-hit truth
+(energy, class). Charges q_i = arctanh²(β_i) + q_min; each object k is
+represented by its highest-charge hit α_k. Losses:
+
+  L_V    = mean_i q_i [ Σ_k M_ik · V_att(i,α_k) + (1-M_ik) · V_rep(i,α_k) ]
+           with V_att = d²·q_αk, V_rep = max(0, 1-d)·q_αk
+  L_beta = mean_k (1 - β_αk)  +  s_B · mean_{noise} β_i
+  L_E    = masked Huber on per-hit energy at object hits
+  L_cls  = masked cross-entropy at object hits
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class CondensationWeights:
+    q_min: float = 0.1
+    s_beta_noise: float = 1.0
+    w_potential: float = 1.0
+    w_beta: float = 1.0
+    w_energy: float = 0.2
+    w_cls: float = 0.2
+
+
+def condensation_loss(outputs, labels, mask, *, k_max: int,
+                      w: CondensationWeights = CondensationWeights()):
+    """outputs: apply() dict (B,N,...); labels: {'object_id' (B,N) int32,
+    'energy' (B,N), 'cls' (B,N) int32}; mask (B,N). Returns (loss, metrics).
+    """
+    beta = jax.nn.sigmoid(outputs["beta_logit"]) * mask
+    beta = jnp.clip(beta, 1e-6, 1.0 - 1e-6)
+    coords = outputs["coords"]
+    obj = labels["object_id"]
+    is_hit = (obj >= 0) & (mask > 0)
+    is_noise = (obj < 0) & (mask > 0)
+
+    q = jnp.arctanh(beta) ** 2 + w.q_min                      # (B,N)
+
+    def per_event(beta_e, q_e, xy_e, obj_e, hit_e, noise_e):
+        n = beta_e.shape[0]
+        # one-hot membership M (N, K)
+        m = (obj_e[:, None] == jnp.arange(k_max)[None, :]) & hit_e[:, None]
+        obj_exists = jnp.any(m, axis=0)                        # (K,)
+        # alpha_k = argmax_i q_i within object k
+        q_masked = jnp.where(m, q_e[:, None], -1.0)
+        alpha = jnp.argmax(q_masked, axis=0)                   # (K,)
+        xy_a = xy_e[alpha]                                     # (K, 2)
+        q_a = q_e[alpha] * obj_exists                          # (K,)
+        b_a = beta_e[alpha]
+        d = jnp.linalg.norm(xy_e[:, None, :] - xy_a[None, :, :] + 1e-9,
+                            axis=-1)                           # (N, K)
+        v_att = (d ** 2) * q_a[None, :]
+        v_rep = jnp.maximum(0.0, 1.0 - d) * q_a[None, :]
+        mf = m.astype(jnp.float32)
+        active = (hit_e | noise_e).astype(jnp.float32)
+        pot = (mf * v_att + (1.0 - mf) * v_rep
+               * obj_exists[None, :]).sum(axis=1) * q_e * active
+        l_v = pot.sum() / jnp.maximum(active.sum(), 1.0)
+        n_obj = jnp.maximum(obj_exists.sum(), 1.0)
+        l_beta = (((1.0 - b_a) * obj_exists).sum() / n_obj
+                  + w.s_beta_noise
+                  * (beta_e * noise_e).sum()
+                  / jnp.maximum(noise_e.sum(), 1.0))
+        return l_v, l_beta
+
+    l_v, l_beta = jax.vmap(per_event)(
+        beta, q, coords, obj, is_hit, is_noise)
+
+    # energy (Huber) + class CE at object hits
+    hit_f = is_hit.astype(jnp.float32)
+    e_err = outputs["energy"] - labels["energy"]
+    huber = jnp.where(jnp.abs(e_err) < 1.0, 0.5 * e_err ** 2,
+                      jnp.abs(e_err) - 0.5)
+    l_e = (huber * hit_f).sum() / jnp.maximum(hit_f.sum(), 1.0)
+    logp = jax.nn.log_softmax(outputs["cls_logits"], axis=-1)
+    ce = -jnp.take_along_axis(
+        logp, jnp.maximum(labels["cls"], 0)[..., None], axis=-1)[..., 0]
+    l_cls = (ce * hit_f).sum() / jnp.maximum(hit_f.sum(), 1.0)
+
+    loss = (w.w_potential * l_v.mean() + w.w_beta * l_beta.mean()
+            + w.w_energy * l_e + w.w_cls * l_cls)
+    metrics = {"loss": loss, "l_potential": l_v.mean(),
+               "l_beta": l_beta.mean(), "l_energy": l_e, "l_cls": l_cls}
+    return loss, metrics

@@ -1,0 +1,160 @@
+"""Dataflow-graph IR for the deployment flow.
+
+Mirrors the paper's internal representation: nodes are operators
+(individual layers), edges are data dependencies. Every pass
+(fusion, partitioning, mapping, spatial parallelization, kernel-level
+optimization) transforms this graph until it is lowered to an executable.
+
+Operator taxonomy (paper §III-A):
+  regular, statically-scheduled access  -> eligible for the MXU ("AIE")
+      linear, dense (fused linear+act), relu, concat, slice, retile,
+      quant, dequant
+  irregular, data-dependent access      -> pinned to XLA/VPU ("FPGA")
+      gravnet_aggregate (kNN gather), cps (condensation point selection),
+      input, output (DDR interface analogues)
+
+The TPU-native GravNet kernel (argmin + one-hot matmul) makes
+``gravnet_aggregate`` statically schedulable; the partitioner can be told
+so via ``tpu_native_gravnet=True`` — that reclassification is a
+beyond-paper optimization measured separately in the benchmarks.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any
+
+# Operator types with regular (statically scheduled) access patterns.
+REGULAR_OPS = frozenset({
+    "linear", "dense", "relu", "concat", "slice", "retile", "quant",
+    "dequant",
+})
+# Irregular / data-dependent ops (the paper pins these to the FPGA).
+IRREGULAR_OPS = frozenset({"gravnet_aggregate", "cps", "input", "output"})
+
+
+@dataclass
+class Operator:
+    name: str
+    op_type: str
+    inputs: list[str] = field(default_factory=list)
+    attrs: dict[str, Any] = field(default_factory=dict)
+    params: dict[str, Any] | None = None      # jnp arrays (w, b, scales)
+    target: str | None = None                 # 'mxu' | 'xla' (partitioner)
+    segment: int | None = None                # pipeline segment id
+    out_dim: int | None = None                # feature dim of the output
+    precision: str = "fp"                     # 'fp' | 'bf16' | 'int8'
+    template: str | None = None               # mapping result
+    attrs_opt: dict[str, Any] = field(default_factory=dict)  # kernel knobs
+
+    def clone(self) -> "Operator":
+        return dataclasses.replace(
+            self,
+            inputs=list(self.inputs),
+            attrs=dict(self.attrs),
+            params=None if self.params is None else dict(self.params),
+            attrs_opt=dict(self.attrs_opt),
+        )
+
+
+class Graph:
+    """Ordered operator graph. Insertion order must be a topological order
+    (validated); passes keep it that way."""
+
+    def __init__(self, ops: list[Operator] | None = None):
+        self.ops: dict[str, Operator] = {}
+        self.meta: dict[str, Any] = {}
+        for op in ops or []:
+            self.add(op)
+
+    # ------------------------------------------------------------ build ----
+    def add(self, op: Operator) -> Operator:
+        if op.name in self.ops:
+            raise ValueError(f"duplicate operator {op.name}")
+        for inp in op.inputs:
+            if inp not in self.ops:
+                raise ValueError(
+                    f"{op.name} depends on undefined {inp} (topo order)")
+        self.ops[op.name] = op
+        return op
+
+    def clone(self) -> "Graph":
+        g = Graph([op.clone() for op in self.ops.values()])
+        g.meta = dict(self.meta)
+        return g
+
+    # ------------------------------------------------------------ query ----
+    def __iter__(self):
+        return iter(self.ops.values())
+
+    def __getitem__(self, name: str) -> Operator:
+        return self.ops[name]
+
+    def __len__(self):
+        return len(self.ops)
+
+    def successors(self, name: str) -> list[Operator]:
+        return [op for op in self.ops.values() if name in op.inputs]
+
+    def topo_order(self) -> list[Operator]:
+        return list(self.ops.values())
+
+    def inputs(self) -> list[Operator]:
+        return [op for op in self.ops.values() if op.op_type == "input"]
+
+    def outputs(self) -> list[Operator]:
+        return [op for op in self.ops.values() if op.op_type == "output"]
+
+    # -------------------------------------------------------- transforms ----
+    def rewire(self, old: str, new: str) -> None:
+        """Point every consumer of ``old`` at ``new``."""
+        for op in self.ops.values():
+            op.inputs = [new if i == old else i for i in op.inputs]
+
+    def remove(self, name: str) -> None:
+        if self.successors(name):
+            raise ValueError(f"cannot remove {name}: has consumers")
+        del self.ops[name]
+
+    def insert_after(self, anchor: str, op: Operator) -> Operator:
+        """Insert ``op`` right after ``anchor`` in the order (op must only
+        depend on ops at or before anchor)."""
+        items = list(self.ops.items())
+        idx = [i for i, (n, _) in enumerate(items) if n == anchor][0]
+        items.insert(idx + 1, (op.name, op))
+        self.ops = dict(items)
+        return op
+
+    def validate(self) -> None:
+        seen: set[str] = set()
+        for op in self.ops.values():
+            for inp in op.inputs:
+                if inp not in seen:
+                    raise ValueError(f"{op.name} reads {inp} before def")
+            seen.add(op.name)
+
+    # ------------------------------------------------------------ stats ----
+    def multicast_ops(self) -> list[str]:
+        """Operators whose output fans out to >1 consumer (the paper's
+        AIE-buffer-pressure hazard that fusion removes)."""
+        return [op.name for op in self.ops.values()
+                if len(self.successors(op.name)) > 1
+                and op.op_type not in ("input",)]
+
+    def summary(self) -> str:
+        lines = []
+        for op in self.ops.values():
+            tgt = op.target or "?"
+            seg = "-" if op.segment is None else str(op.segment)
+            lines.append(f"{op.name:28s} {op.op_type:18s} tgt={tgt:3s} "
+                         f"seg={seg:2s} prec={op.precision:5s} "
+                         f"in={','.join(op.inputs)}")
+        return "\n".join(lines)
+
+
+def is_regular(op: Operator, *, tpu_native_gravnet: bool = False) -> bool:
+    if op.op_type in REGULAR_OPS:
+        return True
+    if tpu_native_gravnet and op.op_type == "gravnet_aggregate":
+        return True
+    return False

@@ -1,0 +1,6 @@
+from repro.core.passes.fusion import fuse
+from repro.core.passes.partition import partition
+from repro.core.passes.mapping import map_templates
+from repro.core.passes.parallelize import parallelize
+from repro.core.passes.kernel_opt import kernel_optimize
+from repro.core.passes.verify import verify

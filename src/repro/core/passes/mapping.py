@@ -1,0 +1,105 @@
+"""Mapping pass (paper §III-A "Mapping").
+
+Pattern-matches every operator onto an architecture template and
+*legalizes layouts*: when the output layout of a producer does not match
+the expected input layout of a consumer, a ``retile`` operator is inserted
+on that edge (the paper's Retile kernel).
+
+Templates:
+    mxu  dense            -> 'fused_dense'   (Pallas kernel; variant picked
+                                              by the kernel-opt pass)
+    xla  dense            -> 'xla_dense'
+    mxu  gravnet_aggregate-> 'gravnet_kernel' (only with tpu_native_gravnet)
+    xla  gravnet_aggregate-> 'xla_gravnet'
+    *    cps              -> 'xla_cps'
+    *    relu/concat/...  -> 'xla_eltwise' / 'xla_concat' / 'xla_slice'
+
+Layouts: MXU templates exchange tensors in ``lane128`` layout (feature dim
+zero-padded to a multiple of 128 — the VREG lane width, the analogue of
+the AIE window format); XLA templates exchange ``compact`` tensors. A
+retile is a real pad or slice op: design point ① pays for every crossing,
+the kernel-opt pass later cancels adjacent pad/slice pairs (layout
+propagation).
+"""
+from __future__ import annotations
+
+from repro.core.graph_ir import Graph, Operator
+
+LANE = 128
+
+_TEMPLATES = {
+    ("dense", "mxu"): "fused_dense",
+    ("dense", "xla"): "xla_dense",
+    ("linear", "mxu"): "fused_dense",   # design ① (pre-fusion) linears
+    ("linear", "xla"): "xla_dense",
+    ("gravnet_aggregate", "mxu"): "gravnet_kernel",
+    ("gravnet_aggregate", "xla"): "xla_gravnet",
+    ("cps", "mxu"): "xla_cps",
+    ("cps", "xla"): "xla_cps",
+    ("relu", "mxu"): "xla_eltwise",
+    ("relu", "xla"): "xla_eltwise",
+    ("concat", "mxu"): "xla_concat",
+    ("concat", "xla"): "xla_concat",
+    ("slice", "mxu"): "xla_slice",
+    ("slice", "xla"): "xla_slice",
+    ("quant", "mxu"): "xla_quant",
+    ("quant", "xla"): "xla_quant",
+    ("dequant", "mxu"): "xla_quant",
+    ("dequant", "xla"): "xla_quant",
+    ("input", "xla"): "io",
+    ("output", "xla"): "io",
+    ("retile", "mxu"): "xla_retile",
+    ("retile", "xla"): "xla_retile",
+}
+
+# layout each template produces / expects on its data edges
+_PRODUCES = {"fused_dense": "lane128", "gravnet_kernel": "lane128"}
+_EXPECTS = {"fused_dense": "lane128", "gravnet_kernel": "lane128"}
+
+
+def map_templates(g: Graph, *, legalize_layouts: bool = True) -> Graph:
+    g = g.clone()
+    for op in g:
+        key = (op.op_type, op.target or "xla")
+        if key not in _TEMPLATES:
+            raise ValueError(f"no template for {key}")
+        op.template = _TEMPLATES[key]
+        op.attrs.setdefault("layout",
+                            _PRODUCES.get(op.template, "compact"))
+    if not legalize_layouts:
+        return g
+
+    # insert retile ops on layout-mismatched edges
+    out = Graph()
+    renamed: dict[str, dict[str, str]] = {}  # producer -> {layout: name}
+    for op in g:
+        want = _EXPECTS.get(op.template, "compact")
+        new_inputs = []
+        for inp in op.inputs:
+            prod = out[renamed[inp]["_self"]]
+            have = prod.attrs.get("layout", "compact")
+            if have == want or prod.op_type in ("input",):
+                new_inputs.append(prod.name)
+                continue
+            cache = renamed[inp]
+            if want in cache:
+                new_inputs.append(cache[want])
+                continue
+            rt = Operator(
+                name=f"{prod.name}->{want}", op_type="retile",
+                inputs=[prod.name],
+                attrs={"from": have, "to": want, "layout": want},
+                out_dim=prod.out_dim, precision=prod.precision,
+                target=op.target, segment=op.segment,
+            )
+            rt.template = "xla_retile"
+            out.add(rt)
+            cache[want] = rt.name
+            new_inputs.append(rt.name)
+        c = op.clone()
+        c.inputs = new_inputs
+        out.add(c)
+        renamed[op.name] = {"_self": c.name}
+    out.meta = dict(g.meta)
+    out.validate()
+    return out

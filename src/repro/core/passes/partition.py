@@ -1,0 +1,49 @@
+"""Partitioning pass (paper §III-A "Partitioning").
+
+Greedy scheme prioritizing the high-density systolic target ("AIE" → MXU):
+every operator with a regular, statically-scheduled access pattern is
+assigned ``target='mxu'``; irregular data-dependent operators
+(gravnet_aggregate kNN, CPS, the DDR-facing input/output ops) stay on
+``target='xla'`` (the "FPGA fabric" analogue — XLA/VPU handles dynamic
+gathers, sorts and control flow). Because only regular ops are MXU-eligible
+the space of valid assignments is tiny and greedy is exhaustive-equivalent,
+as the paper argues.
+
+After assignment, consecutive runs of same-target ops in topological order
+form pipeline *segments* (the paper derives 7: 4 FPGA + 3 AIE for
+CaloClusterNet).
+
+``tpu_native_gravnet=True`` reclassifies gravnet_aggregate as regular —
+the TPU-specific beyond-paper move enabled by the argmin/one-hot-matmul
+kernel (see kernels/gravnet.py); it reduces the segment count and removes
+two boundary crossings per GravNet block.
+"""
+from __future__ import annotations
+
+from repro.core.graph_ir import Graph, is_regular
+
+
+def partition(g: Graph, *, tpu_native_gravnet: bool = False) -> Graph:
+    g = g.clone()
+    for op in g:
+        op.target = ("mxu" if is_regular(op, tpu_native_gravnet=tpu_native_gravnet)
+                     else "xla")
+    # segmentation: consecutive same-target ops share a segment id
+    seg = -1
+    prev = None
+    for op in g:
+        if op.target != prev:
+            seg += 1
+            prev = op.target
+        op.segment = seg
+    return g
+
+
+def segments(g: Graph) -> list[dict]:
+    """Segment table: [{'id', 'target', 'ops': [names]}] in pipeline order."""
+    table: list[dict] = []
+    for op in g:
+        if not table or table[-1]["id"] != op.segment:
+            table.append({"id": op.segment, "target": op.target, "ops": []})
+        table[-1]["ops"].append(op.name)
+    return table

@@ -1,0 +1,85 @@
+"""QKeras-analogue quantization for the deployment flow.
+
+The paper's models are trained with QKeras ``quantized_bits`` and deployed
+8-bit everywhere except the system-boundary partitions (A, G) which use
+16-bit to preserve inference quality. We mirror that:
+
+- ``fake_quant``          : symmetric uniform fake-quantization with a
+                            straight-through estimator — used during QAT.
+- ``calibrate``           : per-op activation scales from max-abs over a
+                            calibration batch.
+- ``quantize_weight``     : per-output-channel int8 weights + f32 scales.
+- ``apply_precision_policy``: paper's mixed policy — first/last pipeline
+                            segments bf16, interior segments int8.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.custom_vjp
+def _ste_round(x):
+    return jnp.round(x)
+
+
+def _ste_fwd(x):
+    return jnp.round(x), None
+
+
+def _ste_bwd(_, g):
+    return (g,)
+
+
+_ste_round.defvjp(_ste_fwd, _ste_bwd)
+
+
+def fake_quant(x, *, bits: int = 8, scale=None):
+    """Symmetric fake quantization with STE gradients (QAT)."""
+    qmax = 2.0 ** (bits - 1) - 1.0
+    if scale is None:
+        scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-8) / qmax
+        scale = jax.lax.stop_gradient(scale)
+    q = jnp.clip(_ste_round(x / scale), -qmax, qmax)
+    return q * scale
+
+
+def quantize_weight(w, *, bits: int = 8):
+    """Per-output-channel symmetric int8 quantization. w: (d_in, d_out)."""
+    qmax = 2.0 ** (bits - 1) - 1.0
+    scale = jnp.maximum(jnp.max(jnp.abs(w), axis=0), 1e-8) / qmax  # (d_out,)
+    w_q = jnp.clip(jnp.round(w / scale[None, :]), -qmax, qmax).astype(jnp.int8)
+    return w_q, scale.astype(jnp.float32)
+
+
+def activation_scale(absmax: float, *, bits: int = 8) -> float:
+    qmax = 2.0 ** (bits - 1) - 1.0
+    return max(float(absmax), 1e-8) / qmax
+
+
+def apply_precision_policy(g, *, policy: str = "mixed"):
+    """Set per-op precision from the paper's policy.
+
+    'fp'    — everything float (the FPGA-only 8-bit baseline is modelled
+              separately; 'fp' is the numerics reference).
+    'mixed' — boundary segments (first and last, the paper's A and G)
+              run bf16; all interior segments run int8.
+    """
+    g = g.clone()
+    if policy == "fp":
+        for op in g:
+            op.precision = "fp"
+        return g
+    assert policy == "mixed", policy
+    seg_ids = sorted({op.segment for op in g})
+    first, last = seg_ids[0], seg_ids[-1]
+    for op in g:
+        if op.segment in (first, last):
+            op.precision = "bf16"
+        else:
+            op.precision = "int8"
+        # io/cps ops keep fp interface semantics regardless
+        if op.op_type in ("input", "output", "cps"):
+            op.precision = "bf16"
+    g.meta["precision_policy"] = policy
+    return g

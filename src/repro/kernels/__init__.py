@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the compute hot spots the paper optimizes:
+
+- fused_dense : the AIE Dense operator (fusion output), fp + int8,
+                'looped' (grid-pipelined) and 'flattened'
+                (chess_flatten_loop analogue) variants.
+- gravnet     : GravNetConv neighbor selection + potential-weighted
+                aggregation, reformulated MXU-natively (argmin/one-hot
+                matmul instead of kNN gather).
+
+ops.py holds the jit'd public wrappers (backend='xla'|'pallas'|
+'pallas_interpret'|'auto'); ref.py holds the pure-jnp oracles.
+"""
+from repro.kernels.ops import (fused_dense, fused_dense_int8,
+                               gravnet_aggregate)

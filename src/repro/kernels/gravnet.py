@@ -1,0 +1,110 @@
+"""Pallas TPU kernel: GravNet neighbor aggregation (dynamic-GNN hot spot).
+
+GravNetConv (Qasim et al., arXiv:1902.07987; used by CaloClusterNet) per
+node i: find the k nearest neighbors of s_i in a *learned* coordinate
+space, weight their learned features f_j by a Gaussian potential
+w_ij = exp(-scale * d²_ij), and aggregate with both mean and max.
+
+HARDWARE ADAPTATION (GPU/FPGA → TPU): the reference implementations use a
+kNN index build + irregular gather — the part the paper keeps on FPGA
+fabric because it is data-dependent. TPUs have no efficient dynamic
+row-gather inside a kernel, but they have an MXU. We therefore reformulate
+neighbor selection as **k iterations of (row-argmin → one-hot → matmul)**:
+
+    for t in 1..k:
+        dmin, amin = min/argmin over candidate distances   (VPU reduce)
+        f_sel      = one_hot(amin) @ F                     (MXU matmul)
+        accumulate mean/max of exp(-scale·dmin) · f_sel
+        knock out the selected column (set distance to +inf)
+
+For trigger-scale graphs (N ≤ a few hundred, k ≤ 16) this is strictly
+regular, statically scheduled compute — which is exactly the property the
+paper's partitioner rewards; on TPU the whole GravNetConv becomes eligible
+for the "regular" (MXU) partition instead of being pinned to the
+irregular side. Cost: k·N²·d_f MACs ≈ MXU noise at these sizes.
+
+Grid: rows are tiled (bm per step); the full S/F/mask operands stay VMEM
+resident (N ≤ ~4096 fits comfortably: 4096×(d_s+d_f)×4B ≪ 128 MiB).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gravnet_kernel(si_ref, s_ref, f_ref, mask_ref, o_ref, *, k, scale, bm,
+                    out_dtype):
+    i = pl.program_id(0)
+    si = si_ref[...].astype(jnp.float32)           # (bm, ds) row block
+    sj = s_ref[...].astype(jnp.float32)            # (n, ds)  all coords
+    fj = f_ref[...].astype(jnp.float32)            # (n, df)  all features
+    maskj = mask_ref[...][:, 0]                    # (n,)     validity
+    n = sj.shape[0]
+    df = fj.shape[1]
+
+    # Pairwise squared distances for this row block: (bm, n).
+    d2 = (jnp.sum(si * si, axis=1, keepdims=True)
+          + jnp.sum(sj * sj, axis=1)[None, :]
+          - 2.0 * jnp.dot(si, sj.T, preferred_element_type=jnp.float32))
+    col = jax.lax.broadcasted_iota(jnp.int32, (bm, n), 1)
+    row = jax.lax.broadcasted_iota(jnp.int32, (bm, n), 0) + i * bm
+    invalid = (maskj[None, :] <= 0) | (col == row)   # exclude self + padding
+    big = jnp.float32(1e30)
+    d2 = jnp.where(invalid, big, jnp.maximum(d2, 0.0))
+
+    mean_acc = jnp.zeros((bm, df), jnp.float32)
+    max_acc = jnp.full((bm, df), -big, jnp.float32)
+
+    def body(_, carry):
+        d2, mean_acc, max_acc = carry
+        dmin = jnp.min(d2, axis=1)                          # (bm,)
+        amin = jnp.argmin(d2, axis=1).astype(jnp.int32)     # (bm,)
+        onehot = (col == amin[:, None]).astype(jnp.float32)  # (bm, n)
+        fsel = jnp.dot(onehot, fj, preferred_element_type=jnp.float32)
+        valid = dmin < big * 0.5
+        w = jnp.where(valid, jnp.exp(-scale * dmin), 0.0)    # (bm,)
+        wf = w[:, None] * fsel
+        mean_acc = mean_acc + wf
+        max_acc = jnp.maximum(max_acc,
+                              jnp.where(valid[:, None], wf, -big))
+        d2 = jnp.where(col == amin[:, None], big, d2)
+        return d2, mean_acc, max_acc
+
+    d2, mean_acc, max_acc = jax.lax.fori_loop(0, k, body,
+                                              (d2, mean_acc, max_acc))
+    mean = mean_acc / jnp.float32(k)
+    maxv = jnp.where(max_acc <= -big * 0.5, 0.0, max_acc)
+    o_ref[...] = jnp.concatenate([mean, maxv], axis=1).astype(out_dtype)
+
+
+def gravnet_aggregate_pallas(s, f, mask, *, k=8, scale=10.0, bm=None,
+                             out_dtype=None, interpret=False):
+    """GravNet aggregation. s:(N,ds) f:(N,df) mask:(N,) -> (N, 2·df).
+
+    Rows with mask<=0 are candidates for neither selection nor output use;
+    caller pads N to a multiple of ``bm``. Self-edges are excluded.
+    """
+    n, _ = s.shape
+    df = f.shape[1]
+    out_dtype = out_dtype or f.dtype
+    bm = bm or min(n, 128)
+    assert n % bm == 0, (n, bm)
+    mask2 = mask.reshape(n, 1).astype(jnp.float32)
+    kern = functools.partial(_gravnet_kernel, k=k, scale=scale, bm=bm,
+                             out_dtype=out_dtype)
+    return pl.pallas_call(
+        kern,
+        grid=(n // bm,),
+        out_shape=jax.ShapeDtypeStruct((n, 2 * df), out_dtype),
+        in_specs=[
+            pl.BlockSpec((bm, s.shape[1]), lambda i: (i, 0)),   # row block
+            pl.BlockSpec((n, s.shape[1]), lambda i: (0, 0)),    # all coords
+            pl.BlockSpec((n, df), lambda i: (0, 0)),            # all feats
+            pl.BlockSpec((n, 1), lambda i: (0, 0)),             # mask
+        ],
+        out_specs=pl.BlockSpec((bm, 2 * df), lambda i: (i, 0)),
+        interpret=interpret,
+    )(s, s, f, mask2)

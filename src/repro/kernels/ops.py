@@ -1,0 +1,136 @@
+"""Jit'd public wrappers for the kernel layer.
+
+Backend selection:
+  - 'xla'              : the jnp reference path (differentiable; what the
+                         dry-run lowers — XLA fuses it on TPU as well).
+  - 'pallas'           : real Mosaic TPU lowering (requires TPU devices).
+  - 'pallas_interpret' : kernel body interpreted op-by-op on CPU — used by
+                         the test suite to validate the TPU kernels here.
+  - 'auto'             : 'pallas' on TPU backends, else 'xla'.
+
+All wrappers pad to tile boundaries and slice back, so callers can use
+arbitrary shapes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels.fused_dense import (fused_dense_int8_pallas,
+                                       fused_dense_pallas)
+from repro.kernels.gravnet import gravnet_aggregate_pallas
+
+
+def _resolve(backend: str) -> str:
+    if backend != "auto":
+        return backend
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+def _pad_to(x, m, axis):
+    r = (-x.shape[axis]) % m
+    if r == 0:
+        return x
+    pw = [(0, 0)] * x.ndim
+    pw[axis] = (0, r)
+    return jnp.pad(x, pw)
+
+
+# ------------------------------------------------------------ fused dense ----
+@functools.partial(jax.jit, static_argnames=("activation", "variant", "bm",
+                                             "bn", "bk", "backend"))
+def fused_dense(x, w, b=None, *, activation="relu", variant="looped",
+                bm=128, bn=128, bk=512, backend="auto"):
+    """act(x @ w + b) with the Pallas fused-dense kernel (or jnp ref)."""
+    backend = _resolve(backend)
+    if backend == "xla":
+        return _ref.fused_dense_ref(x, w, b, activation=activation)
+    interpret = backend == "pallas_interpret"
+    m, kdim = x.shape
+    n = w.shape[1]
+    if variant == "looped":
+        xp = _pad_to(_pad_to(x, bm, 0), bk, 1)
+        wp = _pad_to(_pad_to(w, bk, 0), bn, 1)
+        bp = None if b is None else _pad_to(b, bn, 0)
+    else:  # flattened keeps exact shapes (whole-operand kernel)
+        xp, wp, bp = x, w, b
+    y = fused_dense_pallas(xp, wp, bp, activation=activation, variant=variant,
+                           bm=bm, bn=bn, bk=bk, out_dtype=x.dtype,
+                           interpret=interpret)
+    return y[:m, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("activation", "bm", "bn", "bk",
+                                             "out_dtype", "out_scale",
+                                             "backend"))
+def fused_dense_int8(x_q, w_q, b, x_scale, w_scale, *, activation="relu",
+                     bm=128, bn=128, bk=512, out_dtype=jnp.float32,
+                     out_scale=1.0, backend="auto"):
+    backend = _resolve(backend)
+    if backend == "xla":
+        return _ref.fused_dense_int8_ref(x_q, w_q, b, x_scale, w_scale,
+                                         activation=activation,
+                                         out_dtype=out_dtype,
+                                         out_scale=out_scale)
+    interpret = backend == "pallas_interpret"
+    m, kdim = x_q.shape
+    n = w_q.shape[1]
+    xp = _pad_to(_pad_to(x_q, bm, 0), bk, 1)
+    wp = _pad_to(_pad_to(w_q, bk, 0), bn, 1)
+    bp = None if b is None else _pad_to(b, bn, 0)
+    wsp = _pad_to(w_scale, bn, 0)
+    y = fused_dense_int8_pallas(xp, wp, bp, x_scale.reshape(1, 1), wsp,
+                                activation=activation, bm=bm, bn=bn, bk=bk,
+                                out_dtype=out_dtype, out_scale=out_scale,
+                                interpret=interpret)
+    return y[:m, :n]
+
+
+# ----------------------------------------------------------------- gravnet ----
+@functools.partial(jax.jit, static_argnames=("k", "scale", "bm", "backend"))
+def gravnet_aggregate(s, f, mask, *, k=8, scale=10.0, bm=None,
+                      backend="auto"):
+    """GravNet potential-weighted mean+max neighbor aggregation.
+
+    s:(N,ds) learned coords, f:(N,df) learned features, mask:(N,) validity
+    -> (N, 2·df) = concat(mean_agg, max_agg).
+    """
+    backend = _resolve(backend)
+    if backend == "xla":
+        return _ref.gravnet_aggregate_ref(s, f, mask, k=k, scale=scale)
+    interpret = backend == "pallas_interpret"
+    n = s.shape[0]
+    bm = bm or min(n, 128)
+    sp = _pad_to(s, bm, 0)
+    fp = _pad_to(f, bm, 0)
+    mp = _pad_to(mask.astype(jnp.float32), bm, 0)
+    y = gravnet_aggregate_pallas(sp, fp, mp, k=k, scale=scale, bm=bm,
+                                 interpret=interpret)
+    return y[:n]
+
+
+# --------------------------------------------------------- flash attention ----
+@functools.partial(jax.jit, static_argnames=("causal", "bq", "bk",
+                                             "backend"))
+def flash_attention(q, k, v, *, causal=True, bq=128, bk=128,
+                    backend="auto"):
+    """Blockwise (flash) attention. q:(BH,S,D), k/v:(BH,T,D)."""
+    backend = _resolve(backend)
+    if backend == "xla":
+        return _ref.flash_attention_ref(q, k, v, causal=causal)
+    from repro.kernels.flash_attention import flash_attention_pallas
+    interpret = backend == "pallas_interpret"
+    s, t = q.shape[1], k.shape[1]
+    bq2, bk2 = min(bq, s), min(bk, t)
+    ps, pt = (-s) % bq2, (-t) % bk2
+    qp = _pad_to(q, bq2, 1)
+    kp = _pad_to(k, bk2, 1)
+    vp = _pad_to(v, bk2, 1)
+    if pt and not causal:
+        raise ValueError("non-causal flash requires T % bk == 0")
+    y = flash_attention_pallas(qp, kp, vp, causal=causal, bq=bq2, bk=bk2,
+                               interpret=interpret)
+    return y[:, :s]

@@ -1,0 +1,129 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth for tests).
+
+These are also the differentiable implementations used on the training
+path and the implementations the dry-run lowers (Mosaic needs real TPUs;
+the jnp path is mathematically identical and XLA fuses it aggressively).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_BIG = jnp.float32(1e30)
+
+
+# ------------------------------------------------------------ fused dense ----
+def _activate(y, activation):
+    if activation in (None, "none", "linear"):
+        return y
+    if activation == "relu":
+        return jnp.maximum(y, 0.0)
+    if activation == "gelu":
+        return jax.nn.gelu(y)
+    if activation == "silu":
+        return jax.nn.silu(y)
+    raise ValueError(activation)
+
+
+def fused_dense_ref(x, w, b=None, *, activation="relu", out_dtype=None):
+    out_dtype = out_dtype or x.dtype
+    y = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    if b is not None:
+        y = y + b.astype(jnp.float32)
+    return _activate(y, activation).astype(out_dtype)
+
+
+def fused_dense_int8_ref(x_q, w_q, b, x_scale, w_scale, *, activation="relu",
+                         out_dtype=jnp.float32, out_scale=1.0):
+    acc = jax.lax.dot_general(x_q, w_q, (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.int32)
+    scale = x_scale.reshape(()).astype(jnp.float32) * w_scale.astype(jnp.float32)
+    y = acc.astype(jnp.float32) * scale[None, :]
+    if b is not None:
+        y = y + b.astype(jnp.float32)
+    y = _activate(y, activation)
+    if out_dtype == jnp.int8:
+        y = jnp.clip(jnp.round(y / out_scale), -127.0, 127.0)
+    return y.astype(out_dtype)
+
+
+# ----------------------------------------------------------------- gravnet ----
+def gravnet_aggregate_onehot_ref(s, f, mask, *, k=8, scale=10.0,
+                                 out_dtype=None):
+    """jnp mirror of the TPU kernel algorithm (iterated argmin + one-hot
+    MATMUL selection, no top_k/gather) — the MXU-native lowering used by
+    the tpu_native_gravnet partitioning mode."""
+    out_dtype = out_dtype or f.dtype
+    sf = s.astype(jnp.float32)
+    ff = f.astype(jnp.float32)
+    n = sf.shape[0]
+    df = ff.shape[1]
+    d2 = (jnp.sum(sf * sf, 1)[:, None] + jnp.sum(sf * sf, 1)[None, :]
+          - 2.0 * sf @ sf.T)
+    d2 = jnp.maximum(d2, 0.0)
+    invalid = (mask[None, :] <= 0) | jnp.eye(n, dtype=bool)
+    d2 = jnp.where(invalid, _BIG, d2)
+    col = jnp.arange(n)[None, :]
+
+    # static python loop (k <= 16): fully unrolled like the Pallas
+    # kernel's schedule, and exact under XLA cost analysis (a fori_loop
+    # body would be counted once — EXPERIMENTS.md §Methodology 2)
+    mean_acc = jnp.zeros((n, df), jnp.float32)
+    max_acc = jnp.full((n, df), -_BIG, jnp.float32)
+    for _ in range(k):
+        dmin = jnp.min(d2, axis=1)
+        amin = jnp.argmin(d2, axis=1)
+        onehot = (col == amin[:, None]).astype(jnp.float32)
+        fsel = onehot @ ff
+        valid = dmin < _BIG * 0.5
+        w = jnp.where(valid, jnp.exp(-scale * dmin), 0.0)
+        wf = w[:, None] * fsel
+        mean_acc = mean_acc + wf
+        max_acc = jnp.maximum(max_acc, jnp.where(valid[:, None], wf,
+                                                 -_BIG))
+        d2 = jnp.where(col == amin[:, None], _BIG, d2)
+    mean = mean_acc / k
+    mx = jnp.where(max_acc <= -_BIG * 0.5, 0.0, max_acc)
+    return jnp.concatenate([mean, mx], axis=1).astype(out_dtype)
+
+
+def gravnet_aggregate_ref(s, f, mask, *, k=8, scale=10.0, out_dtype=None):
+    """Oracle using explicit top_k + take_along_axis (GPU/FPGA-style)."""
+    out_dtype = out_dtype or f.dtype
+    sf = s.astype(jnp.float32)
+    ff = f.astype(jnp.float32)
+    n = sf.shape[0]
+    d2 = (jnp.sum(sf * sf, axis=1)[:, None] + jnp.sum(sf * sf, axis=1)[None, :]
+          - 2.0 * sf @ sf.T)
+    d2 = jnp.maximum(d2, 0.0)
+    invalid = (mask[None, :] <= 0) | jnp.eye(n, dtype=bool)
+    d2 = jnp.where(invalid, _BIG, d2)
+    k_eff = min(k, n)  # fewer candidates than k: pad with invalid slots
+    neg_d2k, idx = jax.lax.top_k(-d2, k_eff)                # (n, k_eff)
+    d2k = -neg_d2k
+    if k_eff < k:
+        d2k = jnp.pad(d2k, ((0, 0), (0, k - k_eff)), constant_values=_BIG)
+        idx = jnp.pad(idx, ((0, 0), (0, k - k_eff)))
+    valid = d2k < _BIG * 0.5                                 # (n, k)
+    w = jnp.where(valid, jnp.exp(-scale * d2k), 0.0)         # (n, k)
+    fk = jnp.take(ff, idx, axis=0)                           # (n, k, df)
+    wf = w[..., None] * fk
+    mean = jnp.sum(jnp.where(valid[..., None], wf, 0.0), axis=1) / k
+    mx = jnp.max(jnp.where(valid[..., None], wf, -_BIG), axis=1)
+    mx = jnp.where(mx <= -_BIG * 0.5, 0.0, mx)
+    return jnp.concatenate([mean, mx], axis=1).astype(out_dtype)
+
+
+# --------------------------------------------------------- flash attention ----
+def flash_attention_ref(q, k, v, *, causal=True):
+    """Plain softmax attention oracle. q:(BH,S,D) k,v:(BH,T,D)."""
+    d = q.shape[-1]
+    s = jnp.einsum("bsd,btd->bst", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / jnp.sqrt(jnp.float32(d))
+    if causal:
+        sq, t = q.shape[1], k.shape[1]
+        mask = jnp.arange(t)[None, :] <= jnp.arange(sq)[:, None]
+        s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bst,btd->bsd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,200 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# Perf hillclimbing (EXPERIMENTS.md §Perf): hypothesis → change →
+# re-lower → re-analyse, on the three selected cells. Must run in its own
+# process (512 placeholder devices), like dryrun.py.
+
+import argparse          # noqa: E402
+import dataclasses       # noqa: E402
+import json              # noqa: E402
+import time              # noqa: E402
+
+import jax               # noqa: E402
+
+from repro import configs                                  # noqa: E402
+from repro.launch import analysis                          # noqa: E402
+from repro.launch.dryrun import _mem_dict                  # noqa: E402
+from repro.launch.mesh import make_production_mesh         # noqa: E402
+
+REPORT_DIR = os.path.normpath(os.path.join(
+    os.path.dirname(__file__), "..", "..", "..", "reports", "hillclimb"))
+
+
+def measure(cell, *, cost_cells=None, l_full=None):
+    mesh = make_production_mesh()
+    t0 = time.time()
+    compiled = cell.lower(mesh).compile()
+    terms = analysis.cost_terms(compiled)
+    rec = {"memory": _mem_dict(compiled.memory_analysis()),
+           "per_device": {k: terms[k] for k in
+                          ("flops", "bytes", "collective_bytes")},
+           "collectives": terms["collectives"]["counts"],
+           "t_compile_s": round(time.time() - t0, 1)}
+    if cost_cells is not None:
+        sub = {}
+        for lred, c2 in cost_cells.items():
+            comp2 = c2.lower(mesh).compile()
+            sub[lred] = analysis.cost_terms(comp2)
+        rec["per_device_corrected"] = analysis.affine_extrapolate(
+            sub[2], sub[4], l_full)
+    eff = rec.get("per_device_corrected", rec["per_device"])
+    rec["roofline"] = analysis.roofline(eff, n_chips=mesh.devices.size,
+                                        model_flops=cell.model_flops)
+    return rec
+
+
+def report(tag, hypothesis, rec, baseline=None):
+    rf = rec["roofline"]
+    mem_gib = (rec["memory"]["argument_size_in_bytes"]
+               + rec["memory"]["temp_size_in_bytes"]
+               + rec["memory"]["output_size_in_bytes"]) / 2 ** 30
+    line = (f"[{tag}] C={rf['t_compute_s'] * 1e3:.3f}ms "
+            f"M={rf['t_memory_s'] * 1e3:.3f}ms "
+            f"X={rf['t_collective_s'] * 1e3:.3f}ms "
+            f"dom={rf['dominant']} mem={mem_gib:.2f}GiB "
+            f"useful={rf['useful_flops_ratio']:.2f}")
+    if baseline is not None:
+        b = baseline["roofline"]
+        st_b = max(b["t_compute_s"], b["t_memory_s"], b["t_collective_s"])
+        st_n = max(rf["t_compute_s"], rf["t_memory_s"],
+                   rf["t_collective_s"])
+        line += f"  step {st_b * 1e3:.2f}->{st_n * 1e3:.2f}ms " \
+                f"({st_b / max(st_n, 1e-12):.1f}x)"
+    print(line)
+    os.makedirs(REPORT_DIR, exist_ok=True)
+    rec["hypothesis"] = hypothesis
+    with open(os.path.join(REPORT_DIR, f"{tag}.json"), "w") as f:
+        json.dump(rec, f, indent=1, default=str)
+    return rec
+
+
+# ------------------------------------------------------------ experiments ----
+def exp_decode(run_also_kv8=True):
+    """Cell A: yi-9b:decode_32k (most collective-bound)."""
+    from repro.configs import lm_common
+    mod = configs.get_arch("yi-9b")
+    cfg = mod.full_config()
+
+    base = json.load(open("reports/dryrun/yi-9b__decode_32k__pod16x16"
+                          ".json"))
+    base_rec = {"roofline": base["roofline"], "memory": base["memory"]}
+    print("[A0 baseline] dom=", base["roofline"]["dominant"],
+          " X=", base["roofline"]["t_collective_s"])
+
+    # A1: serving shardings (TP-only params; no per-step FSDP gathers)
+    hyp = ("FSDP all-gathers 9B bf16 params every decode step "
+           "(18GB/16 per device over ICI ≈ 1.1GB/50GBps ≈ 22ms·48L-ish); "
+           "TP-only inference layout removes them; predict X drops "
+           ">50x, memory (params 1.1GB + cache 1.6GB reads) dominates")
+    cell = lm_common.decode_cell("yi-9b", cfg, "decode_32k",
+                                 serving_shardings=True)
+    cc, lf = lm_common.cost_cells("yi-9b", cfg, "decode_32k",
+                                  serving_shardings=True)
+    a1 = report("A1_yi9b_decode_serving_tp", hyp,
+                measure(cell, cost_cells=cc, l_full=lf), base_rec)
+
+    if not run_also_kv8:
+        return
+    # A2: + int8 KV cache with per-token scales
+    hyp2 = ("memory term now dominated by KV-cache reads "
+            "(412GB global bf16 / 256 dev = 1.6GB/dev @819GBps ≈ 2ms); "
+            "int8 cache halves that; predict M -> ~0.65x")
+    cfg8 = dataclasses.replace(cfg, kv_cache_int8=True)
+    cell = lm_common.decode_cell("yi-9b", cfg8, "decode_32k",
+                                 serving_shardings=True)
+    cc, lf = lm_common.cost_cells("yi-9b", cfg8, "decode_32k",
+                                  serving_shardings=True)
+    report("A2_yi9b_decode_serving_tp_kv8", hyp2,
+           measure(cell, cost_cells=cc, l_full=lf), a1)
+
+
+def exp_train():
+    """Cell B: granite-34b:train_4k (worst roofline; OOM at baseline)."""
+    from repro.configs import lm_common
+    mod = configs.get_arch("granite-34b")
+    cfg = mod.full_config()
+    base = json.load(open("reports/dryrun/granite-34b__train_4k__"
+                          "pod16x16.json"))
+    base_rec = {"roofline": base["roofline"], "memory": base["memory"]}
+
+    # B1: sequence-parallel residual stream
+    hyp = ("baseline stores the (B/dp,S,D) residual per layer replicated "
+           "over tp: 88·805MB ≈ 70GB/dev -> OOM; sharding the seq dim "
+           "over tp=16 between blocks cuts activation memory and bytes "
+           "~16x on the residual path; predict temp 203GB -> ~16GB and "
+           "memory term -4x+")
+    cfg1 = dataclasses.replace(cfg, seq_parallel=True)
+    cell = lm_common.train_cell("granite-34b", cfg1)
+    cc, lf = lm_common.cost_cells("granite-34b", cfg1, "train_4k")
+    b1 = report("B1_granite34b_train_seqpar", hyp,
+                measure(cell, cost_cells=cc, l_full=lf), base_rec)
+
+    # B2: + gradient accumulation (4 microbatches)
+    hyp2 = ("remaining activations scale with microbatch; ga=4 cuts live "
+            "batch 4x at the cost of 4 sequential scans (same FLOPs); "
+            "predict temp -> /3-4, bytes roughly flat")
+    cell = lm_common.train_cell("granite-34b", cfg1, grad_accum=4)
+    cc, lf = lm_common.cost_cells("granite-34b", cfg1, "train_4k",
+                                  grad_accum=4)
+    b2 = report("B2_granite34b_train_seqpar_ga4", hyp2,
+                measure(cell, cost_cells=cc, l_full=lf), b1)
+
+    # B3: + bf16 params in the step (cast once, halve weight traffic)
+    hyp3 = ("with activations sharded, per-device bytes are dominated by "
+            "fp32 master params + optimizer state traffic (34B·12B/256 "
+            "≈ 1.6GB) and weight reads each layer; int8 optimizer "
+            "moments halve optimizer traffic; predict bytes -15-25%")
+    cell = lm_common.train_cell("granite-34b", cfg1, grad_accum=4,
+                                quantize_opt=True)
+    cc, lf = lm_common.cost_cells("granite-34b", cfg1, "train_4k",
+                                  grad_accum=4, quantize_opt=True)
+    report("B3_granite34b_train_seqpar_ga4_q8opt", hyp3,
+           measure(cell, cost_cells=cc, l_full=lf), b2)
+
+
+def exp_trigger():
+    """Cell C: caloclusternet:trigger_serve (paper-representative)."""
+    import repro.configs.caloclusternet as ccncfg
+    base = json.load(open("reports/dryrun/caloclusternet__trigger_serve"
+                          "__pod16x16.json"))
+    base_rec = {"roofline": base["roofline"], "memory": base["memory"]}
+
+    # C1: bf16 serving activations
+    hyp = ("trigger serving is bytes-bound (tiny matrices, N=128 "
+           "events·hits streams); bf16 activations halve activation "
+           "traffic; predict M -> ~0.5-0.6x")
+    cell = _ccn_variant(ccncfg, compute_dtype="bf16")
+    c1 = report("C1_ccn_serve_bf16", hyp, measure(cell), base_rec)
+
+    # C2: + MXU-native gravnet (one-hot matmul instead of top_k+gather)
+    hyp2 = ("top_k+gather lowers to sort+scatter (VPU/memory-heavy, and "
+            "the collectives around the gathers dominate X); the "
+            "argmin/one-hot-matmul form is dense MXU work with static "
+            "schedules; predict X and M both drop, C rises slightly")
+    cell = _ccn_variant(ccncfg, compute_dtype="bf16",
+                        gravnet_impl="onehot")
+    report("C2_ccn_serve_bf16_onehot", hyp2, measure(cell), c1)
+
+
+def _ccn_variant(ccncfg, **over):
+    import dataclasses as dc
+    cfg = dc.replace(ccncfg.full_config("upgrade"), **over)
+    return ccncfg._serve_cell(cfg, "trigger_serve", 4096)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--exp", choices=["decode", "train", "trigger", "all"],
+                    default="all")
+    args = ap.parse_args()
+    if args.exp in ("decode", "all"):
+        exp_decode()
+    if args.exp in ("train", "all"):
+        exp_train()
+    if args.exp in ("trigger", "all"):
+        exp_trigger()
+
+
+if __name__ == "__main__":
+    main()

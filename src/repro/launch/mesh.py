@@ -1,0 +1,29 @@
+"""Production mesh definitions.
+
+``make_production_mesh`` is a FUNCTION (never evaluated at import) so that
+importing this module does not touch jax device state — smoke tests and
+benchmarks must keep seeing the single real CPU device; only the dry-run
+sets XLA_FLAGS for 512 placeholder host devices before first jax init.
+"""
+from __future__ import annotations
+
+import jax
+
+# TPU v5e hardware constants used by the roofline model and the
+# parallelization pass's throughput estimator.
+PEAK_FLOPS_BF16 = 197e12      # per chip, FLOP/s
+PEAK_FLOPS_INT8 = 394e12      # per chip, OP/s (int8 MXU)
+HBM_BW = 819e9                # per chip, B/s
+ICI_BW = 50e9                 # per link, B/s
+VMEM_BYTES = 128 * 1024 * 1024
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """1-device mesh for smoke tests / CPU benchmarks."""
+    return jax.make_mesh((1, 1), ("data", "model"))

@@ -1,0 +1,147 @@
+"""Serving driver: ``python -m repro.launch.serve [...]``.
+
+Runs the paper's demonstrator end to end on CPU: deploy CaloClusterNet
+through the design flow at the chosen design point, wrap the compiled
+pipeline in the real-time TriggerServingEngine (micro-batching window,
+strict in-order completion, hedged dispatch), stream synthetic Belle II
+events through it, and report throughput/latency percentiles + a
+monitoring snapshot (the visualization-pipeline analogue: a JSON event
+display of clusters per event).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro.core import caloclusternet as ccn
+from repro.core.passes.parallelize import Requirements
+from repro.core.pipeline import deploy
+from repro.data.belle2 import Belle2Config, current_detector, generate
+from repro.serving import TriggerServingEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--detector", choices=["current", "upgrade"],
+                    default="upgrade")
+    ap.add_argument("--design-point", type=int, default=3,
+                    choices=[1, 2, 3])
+    ap.add_argument("--precision", choices=["fp", "mixed"],
+                    default="mixed")
+    ap.add_argument("--events", type=int, default=512)
+    ap.add_argument("--target-throughput", type=float, default=1e5,
+                    help="events/s target for the P-search (CPU scale)")
+    ap.add_argument("--tpu-native-gravnet", action="store_true")
+    ap.add_argument("--train-steps", type=int, default=40)
+    ap.add_argument("--event-display", default=None,
+                    help="write a JSON event display for the first N "
+                         "events (monitoring pipeline analogue)")
+    args = ap.parse_args()
+
+    if args.detector == "current":
+        cfg = ccn.current_detector_config()
+        gen_cfg = current_detector()
+    else:
+        cfg = ccn.CCNConfig()
+        gen_cfg = Belle2Config()
+
+    params = ccn.init(jax.random.PRNGKey(0), cfg)
+    if args.train_steps > 0:   # brief condensation training so the
+        import jax.numpy as jnp    # demo's decisions are meaningful
+        from repro.core.condensation import condensation_loss
+        from repro.optim import (AdamWConfig, adamw_init, adamw_update,
+                                 cosine_warmup)
+        ocfg = AdamWConfig(weight_decay=0.01)
+        lrf = cosine_warmup(peak_lr=2e-3, warmup_steps=10,
+                            total_steps=args.train_steps)
+        opt = adamw_init(params, ocfg)
+
+        @jax.jit
+        def _step(p, o, b):
+            def lf(q):
+                out = ccn.apply(q, b["feats"], b["mask"], cfg)
+                labels = {"object_id": b["object_id"],
+                          "energy": b["energy"], "cls": b["cls"]}
+                return condensation_loss(out, labels, b["mask"],
+                                         k_max=cfg.k_max)
+            (l, m), g = jax.value_and_grad(lf, has_aux=True)(p)
+            p2, o2, _ = adamw_update(g, o, p, lr=lrf(o["step"]), cfg=ocfg)
+            return p2, o2, l
+
+        for st in range(args.train_steps):
+            raw = generate(gen_cfg, 32, seed=500 + st)
+            b = {k: jnp.asarray(v) for k, v in raw.items()
+                 if k != "trigger_truth"}
+            params, opt, l = _step(params, opt, b)
+        print(f"[serve] warm-trained {args.train_steps} steps, "
+              f"loss {float(l):.3f}")
+    graph = ccn.to_graph(params, cfg)
+    calib = generate(gen_cfg, 64, seed=123)
+    feeds = {"hits": calib["feats"], "mask": calib["mask"]}
+    req = Requirements(design_point=args.design_point, platform="cpu",
+                       precision_policy=args.precision,
+                       n_hits=cfg.n_hits,
+                       target_throughput=args.target_throughput,
+                       max_latency_s=2e-3,
+                       tpu_native_gravnet=args.tpu_native_gravnet)
+    pipe = deploy(graph, req, calibration_feeds=feeds)
+    print(f"[serve] deployed design ③{args.design_point} "
+          f"segments={len(pipe.segments)} P={pipe.par}")
+
+    def infer(batch):
+        return pipe({"hits": batch["hits"], "mask": batch["mask"]})
+
+    # warmup compile
+    warm = {"hits": calib["feats"][:pipe.microbatch],
+            "mask": calib["mask"][:pipe.microbatch]}
+    infer(warm)
+
+    eng = TriggerServingEngine(infer,
+                               microbatch=max(pipe.microbatch, 16),
+                               window_s=2e-3, hedge_after_s=None)
+    events = generate(gen_cfg, args.events, seed=7)
+    t0 = time.perf_counter()
+    futs = []
+    for i in range(args.events):
+        futs.append(eng.submit({"hits": events["feats"][i],
+                                "mask": events["mask"][i]}))
+    results = [f.result(timeout=120) for f in futs]
+    dt = time.perf_counter() - t0
+    eng.drain()
+    s = eng.stats.summary()
+    trig = np.asarray([bool(r["cps"]["trigger"]) for r in results])
+    truth = events["trigger_truth"] > 0
+    eff = float((trig & truth).sum() / max(truth.sum(), 1))
+    fake = float((trig & ~truth).sum() / max((~truth).sum(), 1))
+    print(f"[serve] {args.events} events in {dt:.2f}s -> "
+          f"{args.events / dt:,.0f} ev/s (CPU)")
+    print(f"[serve] latency p50={s['p50_us']:.0f}us "
+          f"p99={s['p99_us']:.0f}us batches={s['batches']}")
+    print(f"[serve] trigger efficiency={eff:.3f} fake rate={fake:.3f} "
+          f"in-order=True")
+    if args.event_display:
+        disp = []
+        for i, r in enumerate(results[:16]):
+            disp.append({
+                "event": i,
+                "clusters": [
+                    {"xy": r["cps"]["cluster_xy"][k].tolist(),
+                     "energy": float(r["cps"]["cluster_e"][k]),
+                     "beta": float(r["cps"]["cluster_beta"][k])}
+                    for k in range(len(r["cps"]["cluster_valid"]))
+                    if bool(r["cps"]["cluster_valid"][k])],
+                "trigger": bool(r["cps"]["trigger"]),
+                "truth": bool(truth[i]),
+            })
+        with open(args.event_display, "w") as f:
+            json.dump(disp, f, indent=1)
+        print(f"[serve] event display -> {args.event_display}")
+    eng.close()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,112 @@
+"""GatedGCN (Bresson & Laurent, arXiv:1711.07553; benchmarking-gnns
+arXiv:2003.00982 config: 16 layers, d_hidden=70, gated aggregator).
+
+Layer (with edge features, residual, batch-norm as in benchmarking-gnns):
+    ê_ij = A h_i + B h_j + C e_ij
+    e'_ij = e_ij + ReLU(BN(ê_ij))
+    η_ij = σ(ê_ij) / (Σ_{j'} σ(ê_ij') + ε)     (gated aggregation)
+    h'_i = h_i + ReLU(BN(U h_i + Σ_j η_ij ⊙ V h_j))
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.dist.sharding import DP, TP
+from repro.models.gnn import common as C
+from repro.nn import dense_init, dense_apply
+
+
+@dataclasses.dataclass(frozen=True)
+class GatedGCNConfig:
+    name: str = "gatedgcn"
+    n_layers: int = 16
+    d_hidden: int = 70
+    d_in: int = 1433
+    d_edge_in: int = 1
+    n_classes: int = 7
+    readout: str = "node"      # 'node' (classification) | 'graph'
+    transform_then_gather: bool = False
+    # beyond-paper (§Perf D): A/B/V are linear, so transform per NODE
+    # (3·N·d²) then gather beats gather-then-transform per EDGE (3·E·d²)
+    # whenever E > N (reddit: 492×). Mathematically identical (tested).
+
+
+def init(key, cfg: GatedGCNConfig):
+    ks = jax.random.split(key, 4 + 6 * cfg.n_layers)
+    p = {
+        "embed_h": dense_init(ks[0], cfg.d_in, cfg.d_hidden),
+        "embed_e": dense_init(ks[1], cfg.d_edge_in, cfg.d_hidden),
+        "head": dense_init(ks[2], cfg.d_hidden, cfg.n_classes),
+        "layers": [],
+    }
+    for i in range(cfg.n_layers):
+        base = 4 + 6 * i
+        p["layers"].append({
+            "A": dense_init(ks[base + 0], cfg.d_hidden, cfg.d_hidden),
+            "B": dense_init(ks[base + 1], cfg.d_hidden, cfg.d_hidden),
+            "Ce": dense_init(ks[base + 2], cfg.d_hidden, cfg.d_hidden),
+            "U": dense_init(ks[base + 3], cfg.d_hidden, cfg.d_hidden),
+            "V": dense_init(ks[base + 4], cfg.d_hidden, cfg.d_hidden),
+        })
+    return p
+
+
+PARAM_RULES = [
+    (r"embed_h/w", P(DP, TP)),
+    (r"layers/.*/w", P(DP, TP)),
+    (r"head/w", P(DP, None)),
+]
+
+
+def apply(params, graph, cfg: GatedGCNConfig):
+    nodes, ei = graph["nodes"], graph["edge_index"]
+    nm, em = graph["node_mask"], graph["edge_mask"]
+    n = nodes.shape[0]
+    h = dense_apply(params["embed_h"], nodes)
+    e = dense_apply(params["embed_e"], graph.get(
+        "edges", jnp.ones((ei.shape[1], cfg.d_edge_in), h.dtype)))
+    for lp in params["layers"]:
+        if cfg.transform_then_gather:
+            ai = jnp.take(dense_apply(lp["A"], h), ei[1], axis=0)
+            bj = jnp.take(dense_apply(lp["B"], h), ei[0], axis=0)
+            vj = jnp.take(dense_apply(lp["V"], h), ei[0], axis=0)
+            ehat = ai + bj + dense_apply(lp["Ce"], e)
+        else:  # paper-faithful gather-then-transform (per-edge denses)
+            hi = C.gather_dst(h, ei)   # i = destination
+            hj = C.gather_src(h, ei)   # j = source
+            ehat = (dense_apply(lp["A"], hi) + dense_apply(lp["B"], hj)
+                    + dense_apply(lp["Ce"], e))
+            vj = dense_apply(lp["V"], hj)
+        e = e + jax.nn.relu(C.masked_batchnorm(ehat, em))
+        sig = jax.nn.sigmoid(ehat) * em[:, None]
+        denom = C.scatter_sum(sig, ei, n) + 1e-6
+        eta = sig / jnp.take(denom, ei[1], axis=0)
+        msg = C.scatter_sum(eta * vj, ei, n, em)
+        h = h + jax.nn.relu(C.masked_batchnorm(
+            dense_apply(lp["U"], h) + msg, nm))
+    if cfg.readout == "graph":
+        pooled = (h * nm[:, None]).sum(0) / jnp.maximum(nm.sum(), 1.0)
+        return dense_apply(params["head"], pooled)
+    return dense_apply(params["head"], h)
+
+
+def loss_fn(params, graph, cfg: GatedGCNConfig):
+    logits = apply(params, graph, cfg)
+    labels = graph["labels"]
+    if cfg.readout == "graph":     # graph-level classification (scalar
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32))  # label)
+        loss = -logp[labels]
+        acc = (logits.argmax(-1) == labels).astype(jnp.float32)
+        return loss, {"loss": loss, "acc": acc}
+    nm = graph["node_mask"] * graph.get("train_mask",
+                                        jnp.ones_like(graph["node_mask"]))
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ce = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    loss = (ce * nm).sum() / jnp.maximum(nm.sum(), 1.0)
+    acc = ((logits.argmax(-1) == labels) * nm).sum() / \
+        jnp.maximum(nm.sum(), 1.0)
+    return loss, {"loss": loss, "acc": acc}

@@ -1,0 +1,188 @@
+"""NequIP (Batzner et al., arXiv:2101.03164): E(3)-equivariant interatomic
+potential. Config: 5 layers, 32 channels, l_max=2, n_rbf=8, cutoff=5 Å.
+
+Features are direct sums of irreps (l, parity) with equal multiplicity:
+hidden = 32×(0,+) ⊕ 32×(1,−) ⊕ 32×(2,+). An interaction layer computes,
+per edge, the tensor product of source features with spherical harmonics
+of the edge direction (filter parity (−1)^l2), weighted channel-wise by an
+MLP of the radial basis ("uvu" connectivity), scatter-sums messages into
+destination nodes, then applies a linear self-interaction per irrep and a
+gate nonlinearity (scalars: SiLU; l>0: sigmoid-gated by dedicated scalar
+channels). Energies are the sum of per-atom scalar readouts; forces are
+−∂E/∂positions via autodiff (rotation equivariance is property-tested).
+
+Kernel regime: **irrep tensor product** (taxonomy §GNN regime 3). The CG
+contraction einsum('emi,ej,ijk->emk') over precomputed intertwiners is the
+hot spot; paths are enumerated statically at init.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.dist.sharding import DP, TP
+from repro.models.gnn import common as C
+from repro.models.gnn.sph import intertwiner_jnp, real_sph
+from repro.nn import dense_init, dense_apply, mlp_init, mlp_apply
+
+# hidden irreps: (l, parity)
+IRREPS = ((0, 1), (1, -1), (2, 1))
+
+
+@dataclasses.dataclass(frozen=True)
+class NequIPConfig:
+    name: str = "nequip"
+    n_layers: int = 5
+    mult: int = 32              # channels per irrep ("d_hidden=32")
+    l_max: int = 2
+    n_rbf: int = 8
+    cutoff: float = 5.0
+    n_species: int = 16
+    radial_hidden: int = 64
+
+
+def _paths(cfg: NequIPConfig):
+    """Enumerate allowed (l1,p1) ⊗ Y_l2 -> (l3,p3) tensor-product paths."""
+    irreps = [ir for ir in IRREPS if ir[0] <= cfg.l_max]
+    paths = []
+    for (l1, p1) in irreps:
+        for l2 in range(cfg.l_max + 1):
+            p2 = (-1) ** l2
+            for (l3, p3) in irreps:
+                if p1 * p2 != p3 or not abs(l1 - l2) <= l3 <= l1 + l2:
+                    continue
+                if intertwiner_jnp(l1, l2, l3) is None:
+                    continue
+                paths.append((l1, p1, l2, l3, p3))
+    return irreps, paths
+
+
+def init(key, cfg: NequIPConfig):
+    irreps, paths = _paths(cfg)
+    m = cfg.mult
+    ks = jax.random.split(key, 6 + 4 * cfg.n_layers)
+    p = {"embed_z": dense_init(ks[0], cfg.n_species, m, bias=False),
+         "readout1": dense_init(ks[1], m, m),
+         "readout2": mlp_init(ks[2], [m, m, 1]),
+         "layers": []}
+    for i in range(cfg.n_layers):
+        k1, k2, k3, k4 = jax.random.split(ks[6 + i], 4)
+        n_gates = m * sum(1 for (l, _) in irreps if l > 0)
+        lp = {
+            # radial MLP -> per-path per-channel weights
+            "radial": mlp_init(k1, [cfg.n_rbf, cfg.radial_hidden,
+                                    len(paths) * m]),
+            # self-interaction: channel mixing per target irrep
+            "self": {f"l{l}p{pr}": dense_init(
+                jax.random.fold_in(k2, 10 * l + pr), m, m, bias=(l == 0))
+                for (l, pr) in irreps},
+            # gate scalars for l>0 irreps from the scalar channels
+            "gate": dense_init(k3, m, n_gates),
+            "skip": {f"l{l}p{pr}": dense_init(
+                jax.random.fold_in(k4, 10 * l + pr), m, m, bias=False)
+                for (l, pr) in irreps},
+        }
+        p["layers"].append(lp)
+    return p
+
+
+PARAM_RULES = [
+    (r"layers/.*/w", P(DP, TP)),
+    (r"readout", P(DP, None)),
+    (r"embed_z/w", P(DP, TP)),
+]
+
+
+def _feat_zero(n, cfg, dtype=jnp.float32):
+    irreps, _ = _paths(cfg)
+    return {f"l{l}p{p}": jnp.zeros((n, cfg.mult, 2 * l + 1), dtype)
+            for (l, p) in irreps}
+
+
+def apply(params, graph, cfg: NequIPConfig):
+    """graph: species (N,), positions (N,3), edge_index (2,E), masks.
+    Returns (total_energy, per_atom_energy)."""
+    irreps, paths = _paths(cfg)
+    ei = graph["edge_index"]
+    nm, em = graph["node_mask"], graph["edge_mask"]
+    n = nm.shape[0]
+    m = cfg.mult
+
+    vec, d, unit = C.edge_vectors(graph["positions"], ei)
+    rbf = C.bessel_rbf(d, n_rbf=cfg.n_rbf, cutoff=cfg.cutoff)
+    env = C.cosine_cutoff(d, cfg.cutoff) * em                   # (E,)
+    ylm = {l2: real_sph(l2, unit) for l2 in range(cfg.l_max + 1)}
+
+    z = jax.nn.one_hot(graph["species"], cfg.n_species)
+    h = _feat_zero(n, cfg)
+    h["l0p1"] = dense_apply(params["embed_z"], z)[:, :, None]   # (N,m,1)
+
+    for lp in params["layers"]:
+        w_all = mlp_apply(lp["radial"], rbf,
+                          activation=jax.nn.silu)               # (E, P*m)
+        w_all = w_all.reshape(-1, len(paths), m) * env[:, None, None]
+        msg = {k: jnp.zeros_like(v) for k, v in h.items()}
+        for pi, (l1, p1, l2, l3, p3) in enumerate(paths):
+            w = w_all[:, pi, :]                                 # (E, m)
+            src = jnp.take(h[f"l{l1}p{p1}"], ei[0], axis=0)     # (E,m,2l1+1)
+            cg = intertwiner_jnp(l1, l2, l3)                    # (i,j,k)
+            contrib = jnp.einsum("emi,ej,ijk->emk", src, ylm[l2], cg)
+            contrib = contrib * w[:, :, None]
+            key = f"l{l3}p{p3}"
+            msg[key] = msg[key] + jax.ops.segment_sum(
+                contrib, ei[1], num_segments=n)
+        # self-interaction + skip + gate
+        new_h = {}
+        scal = msg["l0p1"][:, :, 0]
+        gates = jax.nn.sigmoid(dense_apply(lp["gate"], scal))   # (N, gates)
+        gi = 0
+        for (l, pr) in irreps:
+            key = f"l{l}p{pr}"
+            mixed = jnp.einsum("nmi,mk->nki", msg[key],
+                               lp["self"][key]["w"])
+            if l == 0 and "b" in lp["self"][key]:
+                mixed = mixed + lp["self"][key]["b"][None, :, None]
+            skip = jnp.einsum("nmi,mk->nki", h[key], lp["skip"][key]["w"])
+            if l == 0:
+                new_h[key] = skip + jax.nn.silu(mixed)
+            else:
+                g = gates[:, gi * m:(gi + 1) * m]
+                new_h[key] = skip + mixed * g[:, :, None]
+                gi += 1
+        h = {k: v * nm[:, None, None] for k, v in new_h.items()}
+
+    atom_scal = jax.nn.silu(dense_apply(params["readout1"],
+                                        h["l0p1"][:, :, 0]))
+    e_atom = mlp_apply(params["readout2"], atom_scal,
+                       activation=jax.nn.silu)[:, 0] * nm
+    return e_atom.sum(), e_atom
+
+
+def loss_fn(params, graph, cfg: NequIPConfig, *, force_weight=0.0):
+    if force_weight > 0:
+        def e_fn(pos):
+            g = dict(graph)
+            g["positions"] = pos
+            return apply(params, g, cfg)[0]
+        e, forces_neg = jax.value_and_grad(e_fn)(graph["positions"])
+        loss = (e - graph["energy"]) ** 2
+        if "forces" in graph:
+            fmse = (((-forces_neg - graph["forces"]) ** 2)
+                    * graph["node_mask"][:, None]).sum() / \
+                jnp.maximum(graph["node_mask"].sum(), 1.0)
+            loss = loss + force_weight * fmse
+        return loss, {"loss": loss, "energy": e}
+    e, _ = apply(params, graph, cfg)
+    loss = (e - graph["energy"]) ** 2
+    return loss, {"loss": loss, "energy": e}
+
+
+def forces(params, graph, cfg: NequIPConfig):
+    def e_fn(pos):
+        g = dict(graph)
+        g["positions"] = pos
+        return apply(params, g, cfg)[0]
+    return -jax.grad(e_fn)(graph["positions"])

@@ -1,0 +1,657 @@
+"""Decoder-only transformer family covering the five assigned LM archs.
+
+Features: GQA/MQA + RoPE, RMSNorm or OLMo-style non-parametric LayerNorm,
+gated or plain MLP, GShard-style top-k MoE (einsum dispatch; optional
+scatter dispatch as a perf variant), blockwise (flash-style) causal
+attention, KV-cache decode, layer-stacked params with ``lax.scan`` (keeps
+the HLO one-layer-sized for 88-layer models), remat, and logical-axis
+sharding constraints (dp/tp) translated per-mesh.
+
+Cost-model note (EXPERIMENTS.md §Roofline): XLA's ``cost_analysis`` counts
+a scan body ONCE, so roofline terms are composed from per-layer unrolled
+sub-lowerings × n_layers (``layer_fwd`` / ``layer_step`` are exported for
+exactly that purpose) while the deliverable train/serve steps keep scan.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.dist.sharding import DP, TP, logical_to_physical
+from repro.nn.layers import nonparametric_layernorm, rmsnorm_apply
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    capacity_factor: float = 1.25
+    group_size: int = 512
+    dispatch: str = "einsum"       # 'einsum' (GShard) | 'scatter'
+    shared_experts: int = 0
+    vmap_groups: bool = False      # vmap instead of lax.map over groups
+                                   # (exact cost_analysis; lowering-only)
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    d_head: int = 0                 # 0 -> d_model // n_heads
+    norm: str = "rmsnorm"           # 'rmsnorm' | 'nonparametric'
+    gated_mlp: bool = True
+    activation: str = "silu"
+    moe: MoEConfig | None = None
+    rope_theta: float = 500000.0
+    block_q: int = 512              # attention q-chunk
+    attn_mode: str = "scan"         # 'full' | 'scan' | 'unrolled_tri'
+    remat: bool = True
+    remat_policy: str = "full"      # 'full' | 'dots' (save projection
+                                    # dots, recompute attention/softmax)
+    seq_parallel: bool = False      # shard the residual stream's seq dim
+                                    # over tp between blocks (Korthikanti
+                                    # SP; GSPMD inserts AG/RS at attn)
+    unroll_layers: bool = False     # python loop over layers (exact
+                                    # cost_analysis; roofline lowerings)
+    loss_chunk: int = 1024          # CE computed in seq chunks
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.bfloat16
+    kv_cache_int8: bool = False     # int8 KV cache w/ per-token scales
+                                    # (halves decode cache traffic)
+
+    @property
+    def dh(self) -> int:
+        return self.d_head or self.d_model // self.n_heads
+
+
+# ------------------------------------------------------------------ params ----
+def _layer_shapes(cfg: TransformerConfig):
+    d, dh = cfg.d_model, cfg.dh
+    s = {
+        "wq": (d, cfg.n_heads * dh),
+        "wk": (d, cfg.n_kv_heads * dh),
+        "wv": (d, cfg.n_kv_heads * dh),
+        "wo": (cfg.n_heads * dh, d),
+    }
+    if cfg.norm == "rmsnorm":
+        s["attn_norm"] = (d,)
+        s["ffn_norm"] = (d,)
+    if cfg.moe is None:
+        s["w_up"] = (d, cfg.d_ff)
+        s["w_down"] = (cfg.d_ff, d)
+        if cfg.gated_mlp:
+            s["w_gate"] = (d, cfg.d_ff)
+    else:
+        e = cfg.moe.n_experts
+        s["router"] = (d, e)
+        s["moe_up"] = (e, d, cfg.d_ff)
+        s["moe_down"] = (e, cfg.d_ff, d)
+        if cfg.gated_mlp:
+            s["moe_gate"] = (e, d, cfg.d_ff)
+        if cfg.moe.shared_experts:
+            f_sh = cfg.d_ff * cfg.moe.shared_experts
+            s["sh_up"] = (d, f_sh)
+            s["sh_down"] = (f_sh, d)
+            if cfg.gated_mlp:
+                s["sh_gate"] = (d, f_sh)
+    return s
+
+
+def abstract_params(cfg: TransformerConfig):
+    L = cfg.n_layers
+    dt = cfg.param_dtype
+    layers = {k: jax.ShapeDtypeStruct((L, *v), dt)
+              for k, v in _layer_shapes(cfg).items()}
+    return {
+        "embed": jax.ShapeDtypeStruct((cfg.vocab, cfg.d_model), dt),
+        "layers": layers,
+        "final_norm": jax.ShapeDtypeStruct((cfg.d_model,), dt),
+        "lm_head": jax.ShapeDtypeStruct((cfg.d_model, cfg.vocab), dt),
+    }
+
+
+def init_params(key, cfg: TransformerConfig):
+    """Real initialization (use for smoke-scale configs only)."""
+    shapes = abstract_params(cfg)
+    flat, treedef = jax.tree_util.tree_flatten(shapes)
+    keys = jax.random.split(key, len(flat))
+
+    def mk(k, sds):
+        fan_in = sds.shape[-2] if len(sds.shape) >= 2 else sds.shape[-1]
+        if len(sds.shape) == 1:
+            return jnp.ones(sds.shape, sds.dtype)
+        std = 1.0 / math.sqrt(fan_in)
+        return (std * jax.random.truncated_normal(k, -2, 2, sds.shape)
+                ).astype(sds.dtype)
+
+    return jax.tree_util.tree_unflatten(
+        treedef, [mk(k, s) for k, s in zip(keys, flat)])
+
+
+PARAM_RULES = [
+    (r"embed", P(TP, DP)),
+    (r"lm_head", P(DP, TP)),
+    (r"final_norm", P()),
+    (r"(attn|ffn)_norm", P(None)),
+    (r"layers/w[qkv]$", P(None, DP, TP)),
+    (r"layers/wo", P(None, TP, DP)),
+    (r"layers/w_(gate|up)", P(None, DP, TP)),
+    (r"layers/w_down", P(None, TP, DP)),
+    (r"layers/router", P(None, DP, None)),
+    (r"layers/moe_(gate|up)", P(None, TP, DP, None)),
+    (r"layers/moe_down", P(None, TP, None, DP)),
+    (r"layers/sh_(gate|up)", P(None, DP, TP)),
+    (r"layers/sh_down", P(None, TP, DP)),
+]
+
+
+def _cst(x, mesh, *axes):
+    """with_sharding_constraint using logical axis names ('dp'/'tp')."""
+    if mesh is None:
+        return x
+    spec = logical_to_physical(P(*axes), mesh)
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(mesh, spec))
+
+
+# --------------------------------------------------------------- attention ----
+def _rope(x, positions, theta):
+    """x: (..., S, H, Dh); positions: (..., S)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = jnp.exp(-jnp.arange(0, half, dtype=jnp.float32)
+                    * (math.log(theta) / half))
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    ang = ang[..., None, :]                                  # (..., S, 1, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+def _attn_chunk(q, k, v, q_off, *, causal, lengths=None):
+    """q: (B,Bq,Kv,G,Dh)  k,v: (B,T,Kv,Dh) -> (B,Bq,Kv,G,Dh).
+
+    Grouped-query attention without materializing repeated KV heads.
+    ``q_off`` is the absolute position of q[0] (causal masking);
+    ``lengths`` (B,) masks a KV cache during decode."""
+    dh = q.shape[-1]
+    scores = jnp.einsum("bqkgd,btkd->bkgqt", q, k,
+                        preferred_element_type=jnp.float32)
+    scores = scores / math.sqrt(dh)
+    t_idx = jnp.arange(k.shape[1])
+    if causal:
+        q_idx = q_off + jnp.arange(q.shape[1])
+        mask = t_idx[None, :] <= q_idx[:, None]              # (Bq, T)
+        scores = jnp.where(mask[None, None, None], scores, -1e30)
+    if lengths is not None:
+        lm = t_idx[None, :] < lengths[:, None]               # (B, T)
+        scores = jnp.where(lm[:, None, None, None], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bkgqt,btkd->bqkgd", p, v)
+
+
+def attention(q, k, v, cfg: TransformerConfig, *, causal=True, q_off=0,
+              lengths=None, mode=None):
+    """q: (B,S,Kv,G,Dh), k/v: (B,T,Kv,Dh)."""
+    mode = mode or cfg.attn_mode
+    b, s = q.shape[:2]
+    bq = min(cfg.block_q, s)
+    if mode == "full" or s <= bq:
+        return _attn_chunk(q, k, v, q_off, causal=causal, lengths=lengths)
+    assert s % bq == 0, (s, bq)
+    nq = s // bq
+    if mode == "unrolled_tri":
+        # exact triangular FLOPs: static python loop, kv sliced per chunk
+        outs = []
+        for i in range(nq):
+            hi = (i + 1) * bq
+            outs.append(_attn_chunk(q[:, i * bq:hi], k[:, :hi], v[:, :hi],
+                                    q_off + i * bq, causal=causal,
+                                    lengths=lengths))
+        return jnp.concatenate(outs, axis=1)
+    assert mode == "scan", mode
+    qc = q.reshape(b, nq, bq, *q.shape[2:]).swapaxes(0, 1)
+
+    def step(_, xs):
+        i, qb = xs
+        o = _attn_chunk(qb, k, v, q_off + i * bq, causal=causal,
+                        lengths=lengths)
+        return None, o
+
+    _, o = jax.lax.scan(step, None, (jnp.arange(nq), qc))
+    return o.swapaxes(0, 1).reshape(b, s, *q.shape[2:])
+
+
+# --------------------------------------------------------------------- MoE ----
+def _moe_einsum(x, lp, cfg: TransformerConfig, mesh):
+    """GShard-style einsum dispatch. x: (T, D) -> (T, D)."""
+    mo = cfg.moe
+    t, d = x.shape
+    gs = min(mo.group_size, t)
+    ng = t // gs
+    xg = x.reshape(ng, gs, d)
+    e, k = mo.n_experts, mo.top_k
+    cap = max(4, int(math.ceil(k * gs * mo.capacity_factor / e)))
+
+    def group(xs):
+        logits = (xs @ lp["router"].astype(jnp.float32))        # (gs, E)
+        probs = jax.nn.softmax(logits, axis=-1)
+        topv, topi = jax.lax.top_k(probs, k)                    # (gs, k)
+        topv = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)
+        oh = jax.nn.one_hot(topi, e, dtype=jnp.float32)         # (gs, k, E)
+        flat = oh.reshape(gs * k, e)  # slot-major within token
+        pos = jnp.cumsum(flat, axis=0) - flat                   # rank in queue
+        pos = (pos * flat).sum(-1).reshape(gs, k).astype(jnp.int32)
+        keep = (pos < cap).astype(jnp.float32)
+        posh = jax.nn.one_hot(pos, cap, dtype=jnp.float32)      # (gs,k,C)
+        disp = jnp.einsum("ske,skc,sk->sec", oh, posh, keep)    # (gs,E,C)
+        comb = jnp.einsum("sec,sk,ske->sec", disp, topv * keep, oh)
+        xe = jnp.einsum("sec,sd->ecd", disp.astype(cfg.compute_dtype), xs)
+        up = jnp.einsum("ecd,edf->ecf", xe, lp["moe_up"])
+        if cfg.gated_mlp:
+            gate = jnp.einsum("ecd,edf->ecf", xe, lp["moe_gate"])
+            h = _act(cfg)(gate) * up
+        else:
+            h = _act(cfg)(up)
+        ye = jnp.einsum("ecf,efd->ecd", h, lp["moe_down"])
+        out = jnp.einsum("sec,ecd->sd", comb.astype(cfg.compute_dtype), ye)
+        # aux load-balancing loss (Switch): mean(prob_e * frac_e) * E
+        frac = oh.sum(1).mean(0)
+        aux = (probs.mean(0) * frac).sum() * e
+        return out, aux
+
+    if ng == 1:
+        out, aux = group(xg[0])
+        out = out[None]
+    elif mo.vmap_groups:
+        out, aux = jax.vmap(group)(xg)
+        aux = aux.mean()
+    else:
+        out, aux = jax.lax.map(group, xg)
+        aux = aux.mean()
+    y = out.reshape(t, d)
+    if mo.shared_experts:
+        up = x @ lp["sh_up"]
+        h = (_act(cfg)(x @ lp["sh_gate"]) * up if cfg.gated_mlp
+             else _act(cfg)(up))
+        y = y + h @ lp["sh_down"]
+    return y, aux
+
+
+def _moe_scatter(x, lp, cfg: TransformerConfig, mesh):
+    """Sort/scatter dispatch: O(T·k·D) data movement, no dispatch einsum
+    FLOPs — the beyond-paper variant for small-d_ff MoEs (granite-moe)."""
+    mo = cfg.moe
+    t, d = x.shape
+    e, k = mo.n_experts, mo.top_k
+    cap = max(4, int(math.ceil(k * t * mo.capacity_factor / e)))
+    logits = (x @ lp["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    topv, topi = jax.lax.top_k(probs, k)
+    topv = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)
+    fe = topi.reshape(-1)                                   # (T*k,)
+    fw = topv.reshape(-1)
+    ft = jnp.repeat(jnp.arange(t), k)
+    oh = jax.nn.one_hot(fe, e, dtype=jnp.int32)
+    pos = (jnp.cumsum(oh, axis=0) - oh)
+    pos = (pos * oh).sum(-1)                                # (T*k,)
+    keep = pos < cap
+    buf = jnp.zeros((e, cap, d), cfg.compute_dtype)
+    buf = buf.at[jnp.where(keep, fe, e - 1),
+                 jnp.where(keep, pos, cap - 1)].add(
+        x[ft] * keep[:, None].astype(cfg.compute_dtype))
+    up = jnp.einsum("ecd,edf->ecf", buf, lp["moe_up"])
+    if cfg.gated_mlp:
+        h = _act(cfg)(jnp.einsum("ecd,edf->ecf", buf, lp["moe_gate"])) * up
+    else:
+        h = _act(cfg)(up)
+    ye = jnp.einsum("ecf,efd->ecd", h, lp["moe_down"])      # (E,C,D)
+    gathered = ye[jnp.where(keep, fe, 0), jnp.where(keep, pos, 0)]
+    contrib = gathered * (fw * keep)[:, None].astype(cfg.compute_dtype)
+    y = jax.ops.segment_sum(contrib, ft, num_segments=t)
+    frac = jax.nn.one_hot(topi, e).sum(1).mean(0)
+    aux = (probs.mean(0) * frac).sum() * e
+    if mo.shared_experts:
+        up_sh = x @ lp["sh_up"]
+        h = (_act(cfg)(x @ lp["sh_gate"]) * up_sh if cfg.gated_mlp
+             else _act(cfg)(up_sh))
+        y = y + h @ lp["sh_down"]
+    return y, aux
+
+
+# ------------------------------------------------------------------- layer ----
+def _act(cfg):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu,
+            "relu": jax.nn.relu}[cfg.activation]
+
+
+def _norm(lp, name, x, cfg):
+    if cfg.norm == "nonparametric":
+        return nonparametric_layernorm(x)
+    return rmsnorm_apply({"scale": lp[f"{name}_norm"]}, x)
+
+
+def layer_fwd(lp, x, cfg: TransformerConfig, mesh=None, *, positions=None,
+              cache=None, attn_mode=None, return_kv=False):
+    """One transformer layer. x: (B,S,D). cache: None or dict with
+    k/v (B,T,Kv,Dh) + 'pos' (B,) for decode. Returns (y, aux, new_cache)."""
+    b, s, d = x.shape
+    kv, dh = cfg.n_kv_heads, cfg.dh
+    g = cfg.n_heads // kv
+    lp = jax.tree_util.tree_map(
+        lambda a: a.astype(cfg.compute_dtype)
+        if a.dtype != jnp.int8 else a, lp)
+    xc = x.astype(cfg.compute_dtype)
+    if positions is None:
+        positions = jnp.arange(s)[None, :].astype(jnp.int32)
+
+    h = _norm(lp, "attn", xc, cfg)
+    q = (h @ lp["wq"]).reshape(b, s, kv, g, dh)
+    k = (h @ lp["wk"]).reshape(b, s, kv, dh)
+    v = (h @ lp["wv"]).reshape(b, s, kv, dh)
+    # Attention-internal sharding policy (measured in §Perf A/B and the
+    # post-opt sweep — non-divisible constraints trigger GSPMD
+    # "involuntary full rematerialization"; sharding a contracted dim
+    # (d_head) costs score psums that are negligible at decode but
+    # catastrophic at prefill/train scale):
+    #   decode (s==1): shard d_head — consistent with the cache specs.
+    #   prefill/train: kv-shard if divisible; else group-shard; else
+    #     repeat kv to flat heads (H=kv·g) when that divides; else
+    #     replicate attention internals over tp (redundant attention
+    #     compute beats terabytes of collectives).
+    tp_n = max(dict(zip(mesh.axis_names, mesh.devices.shape)
+                    ).get("model", 1) if mesh is not None else 1, 1)
+    flat_g = None
+    if cache is not None or s == 1:
+        q = _cst(q, mesh, DP, None, None, None, TP)
+        k = _cst(k, mesh, DP, None, None, TP)
+        v = _cst(v, mesh, DP, None, None, TP)
+    elif kv % tp_n == 0:
+        q = _cst(q, mesh, DP, None, TP, None, None)
+        k = _cst(k, mesh, DP, None, TP, None)
+        v = _cst(v, mesh, DP, None, TP, None)
+    elif g % tp_n == 0:
+        q = _cst(q, mesh, DP, None, None, TP, None)
+        k = _cst(k, mesh, DP, None, None, None)
+        v = _cst(v, mesh, DP, None, None, None)
+    elif (kv * g) % tp_n == 0:
+        # flat-head form: repeat kv, attend as MHA sharded on H
+        flat_g = g
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+        q = q.reshape(b, s, kv * g, 1, dh)
+        kv, g = kv * g, 1
+        q = _cst(q, mesh, DP, None, TP, None, None)
+        k = _cst(k, mesh, DP, None, TP, None)
+        v = _cst(v, mesh, DP, None, TP, None)
+    else:
+        q = _cst(q, mesh, DP, None, None, None, None)
+        k = _cst(k, mesh, DP, None, None, None)
+        v = _cst(v, mesh, DP, None, None, None)
+    q = _rope(q.reshape(b, s, kv * g, dh), positions,
+              cfg.rope_theta).reshape(b, s, kv, g, dh)
+    k = _rope(k, positions, cfg.rope_theta)
+
+    new_cache = None
+    if cache is not None:
+        # decode: append into the cache at pos, attend with length mask
+        pos = cache["pos"]                                    # (B,)
+
+        def upd(c, u, p):
+            return jax.vmap(lambda cc, uu, pp: jax.lax.dynamic_update_slice(
+                cc, uu, (pp,) + (0,) * (cc.ndim - 1)))(c, u, p)
+
+        if cfg.kv_cache_int8:
+            def quant(u):                       # (B,s,kv,dh)
+                sc = jnp.max(jnp.abs(u), axis=-1, keepdims=True) / 127.0
+                sc = jnp.maximum(sc, 1e-8)
+                qv = jnp.clip(jnp.round(u / sc), -127, 127
+                              ).astype(jnp.int8)
+                return qv, sc[..., 0].astype(jnp.float32)
+
+            kq, ks_ = quant(k)
+            vq, vs_ = quant(v)
+            ck_q = upd(cache["k"], kq, pos)
+            cv_q = upd(cache["v"], vq, pos)
+            cks = upd(cache["k_scale"], ks_, pos)
+            cvs = upd(cache["v_scale"], vs_, pos)
+            ck = (ck_q.astype(cfg.compute_dtype)
+                  * cks[..., None].astype(cfg.compute_dtype))
+            cv = (cv_q.astype(cfg.compute_dtype)
+                  * cvs[..., None].astype(cfg.compute_dtype))
+            new_cache = {"k": ck_q, "v": cv_q, "k_scale": cks,
+                         "v_scale": cvs, "pos": pos + s}
+        else:
+            ck = upd(cache["k"], k, pos)
+            cv = upd(cache["v"], v, pos)
+            new_cache = {"k": ck, "v": cv, "pos": pos + s}
+        o = _attn_chunk(q, ck, cv, 0, causal=False, lengths=pos + s)
+    else:
+        o = attention(q, k, v, cfg, causal=True, mode=attn_mode)
+        if return_kv:
+            # post-RoPE k/v, matching decode convention; under flat-head
+            # repeat, recover the unrepeated kv heads (every flat_g-th)
+            if flat_g:
+                new_cache = (k[:, :, ::flat_g], v[:, :, ::flat_g])
+            else:
+                new_cache = (k, v)
+    o = o.reshape(b, s, kv * g * dh)
+    xc = xc + (o @ lp["wo"])
+    xc = _cst(xc, mesh, DP, TP if cfg.seq_parallel and s > 1 else None,
+              None)
+
+    h = _norm(lp, "ffn", xc, cfg)
+    aux = jnp.float32(0.0)
+    if cfg.moe is None:
+        up = h @ lp["w_up"]
+        if cfg.gated_mlp:
+            ff = _act(cfg)(h @ lp["w_gate"]) * up
+        else:
+            ff = _act(cfg)(up)
+        ff = _cst(ff, mesh, DP, None, TP)
+        y = ff @ lp["w_down"]
+    else:
+        fn = _moe_scatter if cfg.moe.dispatch == "scatter" else _moe_einsum
+        y2d, aux = fn(h.reshape(b * s, d), lp, cfg, mesh)
+        y = y2d.reshape(b, s, d)
+    xc = xc + y
+    xc = _cst(xc, mesh, DP, TP if cfg.seq_parallel and s > 1 else None,
+              None)
+    return xc.astype(x.dtype), aux, new_cache
+
+
+# -------------------------------------------------------------- full model ----
+def forward(params, tokens, cfg: TransformerConfig, mesh=None):
+    """tokens: (B,S) -> final hidden states (B,S,D) + aux loss."""
+    x = jnp.take(params["embed"], tokens, axis=0
+                 ).astype(cfg.compute_dtype)
+    x = _cst(x, mesh, DP, TP if cfg.seq_parallel else None, None)
+
+    def body(carry, lp):
+        x, aux = carry
+        y, a, _ = layer_fwd(lp, x, cfg, mesh)
+        return (y, aux + a), None
+
+    step = body
+    if cfg.remat:
+        policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                  if cfg.remat_policy == "dots" else None)
+        step = jax.checkpoint(body, prevent_cse=False, policy=policy)
+    if cfg.unroll_layers:
+        carry = (x, jnp.float32(0.0))
+        for i in range(cfg.n_layers):
+            lp = jax.tree_util.tree_map(lambda a: a[i], params["layers"])
+            carry, _ = step(carry, lp)
+        x, aux = carry
+    else:
+        (x, aux), _ = jax.lax.scan(step, (x, jnp.float32(0.0)),
+                                   params["layers"])
+    if cfg.norm == "nonparametric":
+        x = nonparametric_layernorm(x)
+    else:
+        x = rmsnorm_apply({"scale": params["final_norm"].astype(
+            cfg.compute_dtype)}, x)
+    return x, aux / cfg.n_layers
+
+
+def loss_fn(params, batch, cfg: TransformerConfig, mesh=None):
+    """Chunked cross-entropy; batch: {'tokens','labels'} (B,S)."""
+    x, aux = forward(params, batch["tokens"], cfg, mesh)
+    head = params["lm_head"].astype(cfg.compute_dtype)
+    b, s, d = x.shape
+    ck = min(cfg.loss_chunk, s)
+    nc = s // ck
+
+    def chunk(carry, xs):
+        xb, yb = xs                                     # (B,ck,D), (B,ck)
+        logits = (xb @ head).astype(jnp.float32)
+        logits = _cst(logits, mesh, DP, None, TP)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, yb[..., None], -1)[..., 0]
+        return carry + (logz - gold).sum(), None
+
+    xc = x.reshape(b, nc, ck, d).swapaxes(0, 1)
+    yc = batch["labels"].reshape(b, nc, ck).swapaxes(0, 1)
+    tot, _ = jax.lax.scan(chunk, jnp.float32(0.0), (xc, yc))
+    ce = tot / (b * s)
+    return ce + 0.01 * aux, {"ce": ce, "aux": aux}
+
+
+def prefill(params, tokens, cfg: TransformerConfig, mesh=None):
+    """Process a full prompt: returns (last-position logits (B,V), cache).
+
+    The KV cache is emitted as scan ys — (L, B, S, Kv, Dh) — ready for
+    ``decode_step``."""
+    b, s = tokens.shape
+    kv, dh = cfg.n_kv_heads, cfg.dh
+    x = jnp.take(params["embed"], tokens, axis=0
+                 ).astype(cfg.compute_dtype)
+    x = _cst(x, mesh, DP, None, None)
+    positions = jnp.arange(s)[None, :].astype(jnp.int32)
+
+    def body(x, lp):
+        y, _, (k, v) = layer_fwd(lp, x, cfg, mesh, positions=positions,
+                                 return_kv=True)
+        return y, (k, v)
+
+    if cfg.unroll_layers:
+        ks, vs = [], []
+        for i in range(cfg.n_layers):
+            lp = jax.tree_util.tree_map(lambda a: a[i], params["layers"])
+            x, (k, v) = body(x, lp)
+            ks.append(k)
+            vs.append(v)
+        ks, vs = jnp.stack(ks), jnp.stack(vs)
+    else:
+        x, (ks, vs) = jax.lax.scan(body, x, params["layers"])
+    if cfg.norm == "nonparametric":
+        x = nonparametric_layernorm(x)
+    else:
+        x = rmsnorm_apply({"scale": params["final_norm"].astype(
+            cfg.compute_dtype)}, x)
+    logits = (x[:, -1] @ params["lm_head"].astype(cfg.compute_dtype))
+    cache = {"k": ks, "v": vs,
+             "pos": jnp.full((cfg.n_layers, b), s, jnp.int32)}
+    return logits.astype(jnp.float32), cache
+
+
+# ------------------------------------------------------------------ decode ----
+def init_cache(cfg: TransformerConfig, batch: int, max_len: int,
+               dtype=None):
+    dtype = dtype or cfg.compute_dtype
+    kv, dh, L = cfg.n_kv_heads, cfg.dh, cfg.n_layers
+    if cfg.kv_cache_int8:
+        return {
+            "k": jnp.zeros((L, batch, max_len, kv, dh), jnp.int8),
+            "v": jnp.zeros((L, batch, max_len, kv, dh), jnp.int8),
+            "k_scale": jnp.zeros((L, batch, max_len, kv), jnp.float32),
+            "v_scale": jnp.zeros((L, batch, max_len, kv), jnp.float32),
+            "pos": jnp.zeros((L, batch), jnp.int32),
+        }
+    return {
+        "k": jnp.zeros((L, batch, max_len, kv, dh), dtype),
+        "v": jnp.zeros((L, batch, max_len, kv, dh), dtype),
+        "pos": jnp.zeros((L, batch), jnp.int32),
+    }
+
+
+def cache_specs(cfg: TransformerConfig, *, seq_shard: bool = False):
+    """PartitionSpecs for the KV cache. ``seq_shard=True`` shards the
+    sequence axis over dp (flash-decoding style; for long_500k batch=1)."""
+    if seq_shard:
+        kvspec = P(None, None, DP, TP, None)
+    else:
+        kvspec = P(None, DP, None, TP, None)
+    return {"k": kvspec, "v": kvspec, "pos": P(None, None)}
+
+
+def decode_step(params, cache, tokens, cfg: TransformerConfig, mesh=None):
+    """tokens: (B, 1) -> (logits (B,V), new_cache). Scan over layers."""
+    b = tokens.shape[0]
+    x = jnp.take(params["embed"], tokens, axis=0
+                 ).astype(cfg.compute_dtype)          # (B,1,D)
+    positions = cache["pos"][0][:, None]              # (B,1) absolute pos
+
+    def body(x, layer):
+        lp, ck = layer
+        y, _, nc = layer_fwd(lp, x, cfg, mesh, positions=positions,
+                             cache=ck)
+        return y, nc
+
+    if cfg.unroll_layers:
+        ncs = []
+        for i in range(cfg.n_layers):
+            sl = lambda a: a[i]  # noqa: E731
+            x, nc = body(x, (jax.tree_util.tree_map(sl, params["layers"]),
+                             jax.tree_util.tree_map(sl, cache)))
+            ncs.append(nc)
+        new_cache = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *ncs)
+    else:
+        x, new_cache = jax.lax.scan(body, x, (params["layers"], cache))
+    if cfg.norm == "nonparametric":
+        x = nonparametric_layernorm(x)
+    else:
+        x = rmsnorm_apply({"scale": params["final_norm"].astype(
+            cfg.compute_dtype)}, x)
+    logits = (x[:, 0] @ params["lm_head"].astype(cfg.compute_dtype))
+    return logits.astype(jnp.float32), new_cache
+
+
+# per-layer decode for the roofline composition
+def layer_decode(lp, x, cache_l, cfg: TransformerConfig, mesh=None):
+    positions = cache_l["pos"][:, None]
+    return layer_fwd(lp, x, cfg, mesh, positions=positions, cache=cache_l)
+
+
+def model_flops(cfg: TransformerConfig, batch: int, seq: int,
+                *, training: bool, decode: bool = False,
+                kv_len: int = 0) -> float:
+    """Analytic MODEL_FLOPS: 6·N·D (dense) / 6·N_active·D (MoE) style,
+    attention added explicitly."""
+    d, dh = cfg.d_model, cfg.dh
+    tok = batch * seq
+    per_layer = 2 * d * (cfg.n_heads + 2 * cfg.n_kv_heads) * dh \
+        + 2 * cfg.n_heads * dh * d
+    if cfg.moe is None:
+        per_layer += 2 * d * cfg.d_ff * (3 if cfg.gated_mlp else 2)
+    else:
+        per_layer += 2 * d * cfg.d_ff * (3 if cfg.gated_mlp else 2) \
+            * (cfg.moe.top_k + cfg.moe.shared_experts)
+        per_layer += 2 * d * cfg.moe.n_experts  # router
+    attn_ctx = kv_len if decode else seq / 2  # causal average
+    attn = 2 * 2 * cfg.n_heads * dh * attn_ctx
+    embed_head = 2 * d * cfg.vocab  # lm head matmul (embed is gather)
+    fwd = tok * (cfg.n_layers * (per_layer + attn) + embed_head)
+    return fwd * (3.0 if training else 1.0)

@@ -1,0 +1,8 @@
+from repro.nn.init import lecun_normal, normal_init, truncated_normal, zeros_init, ones_init
+from repro.nn.layers import (
+    dense_init, dense_apply,
+    layernorm_init, layernorm_apply, rmsnorm_init, rmsnorm_apply,
+    nonparametric_layernorm,
+    embedding_init, embedding_lookup,
+    mlp_init, mlp_apply,
+)

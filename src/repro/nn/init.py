@@ -1,0 +1,32 @@
+"""Parameter initializers (pure functions over jax.random keys)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def lecun_normal(key, shape, dtype=jnp.float32, in_axis: int = -2):
+    """LeCun-normal (fan-in) initialization — QKeras/Keras default for Dense."""
+    fan_in = shape[in_axis] if len(shape) > 1 else shape[0]
+    std = math.sqrt(1.0 / max(1, fan_in))
+    return (std * jax.random.truncated_normal(key, -2.0, 2.0, shape)).astype(dtype)
+
+
+def normal_init(key, shape, std=0.02, dtype=jnp.float32):
+    return (std * jax.random.normal(key, shape)).astype(dtype)
+
+
+def truncated_normal(key, shape, std=0.02, dtype=jnp.float32):
+    return (std * jax.random.truncated_normal(key, -2.0, 2.0, shape)).astype(dtype)
+
+
+def zeros_init(key, shape, dtype=jnp.float32):
+    del key
+    return jnp.zeros(shape, dtype)
+
+
+def ones_init(key, shape, dtype=jnp.float32):
+    del key
+    return jnp.ones(shape, dtype)

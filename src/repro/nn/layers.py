@@ -1,0 +1,88 @@
+"""Functional NN layers: params are plain dict pytrees, applies are pure fns.
+
+Convention: ``<layer>_init(key, ...) -> params`` and
+``<layer>_apply(params, x, ...) -> y``. No module objects, no state — this
+keeps everything jit/scan/shard_map friendly and makes the dataflow-graph
+compiler in ``repro.core`` able to treat layers as plain operators.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.init import lecun_normal, normal_init, ones_init, zeros_init
+
+
+# ---------------------------------------------------------------- dense ----
+def dense_init(key, d_in: int, d_out: int, *, bias: bool = True,
+               dtype=jnp.float32, init=lecun_normal):
+    kw, kb = jax.random.split(key)
+    p = {"w": init(kw, (d_in, d_out), dtype=dtype)}
+    if bias:
+        p["b"] = zeros_init(kb, (d_out,), dtype=dtype)
+    return p
+
+
+def dense_apply(params, x, *, activation=None):
+    y = x @ params["w"]
+    if "b" in params:
+        y = y + params["b"]
+    if activation is not None:
+        y = activation(y)
+    return y
+
+
+# ----------------------------------------------------------------- norms ----
+def layernorm_init(key, dim: int, dtype=jnp.float32):
+    return {"scale": ones_init(key, (dim,), dtype), "bias": zeros_init(key, (dim,), dtype)}
+
+
+def layernorm_apply(params, x, *, eps: float = 1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return y * params["scale"] + params["bias"]
+
+
+def rmsnorm_init(key, dim: int, dtype=jnp.float32):
+    return {"scale": ones_init(key, (dim,), dtype)}
+
+
+def rmsnorm_apply(params, x, *, eps: float = 1e-6):
+    # compute in fp32 for stability regardless of activation dtype
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(ms + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def nonparametric_layernorm(x, *, eps: float = 1e-5):
+    """OLMo-style LayerNorm with no learnable affine parameters."""
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype)
+
+
+# ------------------------------------------------------------- embedding ----
+def embedding_init(key, vocab: int, dim: int, *, std=0.02, dtype=jnp.float32):
+    return {"table": normal_init(key, (vocab, dim), std=std, dtype=dtype)}
+
+
+def embedding_lookup(params, ids):
+    return jnp.take(params["table"], ids, axis=0)
+
+
+# ------------------------------------------------------------------- mlp ----
+def mlp_init(key, dims, *, bias: bool = True, dtype=jnp.float32):
+    """dims = [d_in, h1, ..., d_out]; returns list of dense params."""
+    keys = jax.random.split(key, len(dims) - 1)
+    return [dense_init(k, a, b, bias=bias, dtype=dtype)
+            for k, a, b in zip(keys, dims[:-1], dims[1:])]
+
+
+def mlp_apply(params, x, *, activation=jax.nn.relu, final_activation=None):
+    for i, p in enumerate(params):
+        act = activation if i < len(params) - 1 else final_activation
+        x = dense_apply(p, x, activation=act)
+    return x

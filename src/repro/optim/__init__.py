@@ -1,0 +1,3 @@
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.optim.schedule import cosine_warmup
+from repro.optim.compress import compressed_psum, error_feedback_init

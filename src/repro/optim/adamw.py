@@ -1,0 +1,135 @@
+"""AdamW with optional int8 block-quantized moments (bitsandbytes-style).
+
+The int8 states are what make llama4-maverick-400b trainable on a single
+256-chip v5e pod: fp32 m+v would cost 3.2 TB; int8 blockwise (block=256,
+fp32 absmax scale per block → 1.016 bytes/param/moment) costs 0.8 TB.
+
+States are plain pytrees → checkpointable and re-shardable like params.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    quantize_states: bool = False
+
+
+# ------------------------------------------------------- int8 block quant ----
+def _q8_pack(x):
+    flat = x.reshape(-1).astype(jnp.float32)
+    n = flat.size
+    nb = -(-n // BLOCK)
+    pad = nb * BLOCK - n
+    flat = jnp.pad(flat, (0, pad)).reshape(nb, BLOCK)
+    scale = jnp.maximum(jnp.max(jnp.abs(flat), axis=1), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(flat / scale[:, None]), -127, 127
+                 ).astype(jnp.int8)
+    return {"q": q.reshape(-1), "scale": scale}
+
+
+def _q8_unpack(s, shape):
+    n = 1
+    for d in shape:
+        n *= d
+    nb = s["scale"].shape[0]
+    flat = (s["q"].reshape(nb, BLOCK).astype(jnp.float32)
+            * s["scale"][:, None]).reshape(-1)[:n]
+    return flat.reshape(shape)
+
+
+# ------------------------------------------------------------- optimizer ----
+def adamw_init(params, cfg: AdamWConfig):
+    if cfg.quantize_states:
+        m = jax.tree_util.tree_map(lambda p: _q8_pack(jnp.zeros_like(
+            p, jnp.float32)), params)
+        v = jax.tree_util.tree_map(lambda p: _q8_pack(jnp.zeros_like(
+            p, jnp.float32)), params)
+    else:
+        m = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        v = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return {"m": m, "v": v, "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree_util.tree_leaves(tree)))
+
+
+def adamw_update(grads, state, params, *, lr, cfg: AdamWConfig):
+    step = state["step"] + 1
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gn, 1e-12))
+    grads = jax.tree_util.tree_map(
+        lambda g: g.astype(jnp.float32) * scale, grads)
+    b1, b2 = cfg.b1, cfg.b2
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        if cfg.quantize_states:
+            mf = _q8_unpack(m, p.shape)
+            vf = _q8_unpack(v, p.shape) ** 2   # v stored in sqrt domain
+        else:
+            mf, vf = m, v
+        mf = b1 * mf + (1 - b1) * g
+        vf = b2 * vf + (1 - b2) * g * g
+        u = (mf / c1) / (jnp.sqrt(vf / c2) + cfg.eps)
+        # bound the per-coordinate step (guards against quantization
+        # underflow in the int8 second moment; near-no-op for fp32)
+        u = jnp.clip(u, -20.0, 20.0)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            u = u + cfg.weight_decay * p.astype(jnp.float32)
+        newp = (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+        if cfg.quantize_states:
+            return newp, _q8_pack(mf), _q8_pack(jnp.sqrt(vf))
+        return newp, mf, vf
+
+    flat_p, tdef = jax.tree_util.tree_flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    is_q = cfg.quantize_states
+    leafdef = (lambda x: isinstance(x, dict) and "q" in x) if is_q else None
+    flat_m = jax.tree_util.tree_flatten(
+        state["m"], is_leaf=leafdef)[0] if is_q else tdef.flatten_up_to(
+        state["m"])
+    flat_v = jax.tree_util.tree_flatten(
+        state["v"], is_leaf=leafdef)[0] if is_q else tdef.flatten_up_to(
+        state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree_util.tree_unflatten(tdef, [o[0] for o in out])
+    new_m = jax.tree_util.tree_unflatten(tdef, [o[1] for o in out])
+    new_v = jax.tree_util.tree_unflatten(tdef, [o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "step": step}, \
+        {"grad_norm": gn}
+
+
+def opt_state_specs(param_specs, cfg: AdamWConfig):
+    """PartitionSpecs mirroring the optimizer state tree."""
+    from jax.sharding import PartitionSpec as P
+    if cfg.quantize_states:
+        def qspec(ps):
+            # quantized buffers are flat: shard on the first (only) dim
+            # with the param's first sharded axis if any, else replicate
+            first = next((a for a in ps if a is not None), None)
+            return {"q": P(first), "scale": P(first)}
+        m = jax.tree_util.tree_map(qspec, param_specs,
+                                   is_leaf=lambda x: isinstance(x, P))
+    else:
+        m = param_specs
+    from jax.sharding import PartitionSpec
+    return {"m": m, "v": m, "step": PartitionSpec()}

@@ -1,0 +1,170 @@
+"""Real-time trigger serving engine.
+
+Mirrors the paper's demonstrator runtime (§III-B): a dataflow pipeline
+that processes inference requests without host intervention, with three
+hard requirements from §I:
+
+  (1) bounded decision latency  → micro-batching window with a deadline:
+      a batch is launched when either ``microbatch`` events are queued or
+      ``window_s`` has elapsed (zero-padded, like the paper's padding of
+      missing inputs);
+  (2) throughput               → batched dispatch + double buffering
+      (one batch in flight while the next fills — the FPGA pipeline
+      analogue of overlapping Load/compute/Store);
+  (3) strict in-order results  → a release stage that completes futures
+      in submission order no matter how batches finish.
+
+Straggler mitigation: ``hedge_after_s`` re-dispatches a batch to the
+backup executor if the primary hasn't returned in time; first result
+wins (duplicate-safe because inference is pure).
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from concurrent.futures import Future, ThreadPoolExecutor
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class ServingStats:
+    completed: int = 0
+    batches: int = 0
+    hedged: int = 0
+    padded_events: int = 0
+    latencies_s: list = dataclasses.field(default_factory=list)
+
+    def percentile(self, p):
+        return float(np.percentile(self.latencies_s, p)) \
+            if self.latencies_s else float("nan")
+
+    def summary(self):
+        lat = self.latencies_s
+        return {
+            "completed": self.completed, "batches": self.batches,
+            "hedged": self.hedged,
+            "p50_us": self.percentile(50) * 1e6 if lat else None,
+            "p99_us": self.percentile(99) * 1e6 if lat else None,
+            "mean_us": float(np.mean(lat)) * 1e6 if lat else None,
+        }
+
+
+class TriggerServingEngine:
+    def __init__(self, infer_fn, *, microbatch: int, window_s: float = 1e-3,
+                 queue_depth: int = 1024, hedge_after_s: float | None = None):
+        """infer_fn: dict of stacked numpy feeds (B=microbatch) -> outputs
+        pytree with leading batch dim. Must be pure (hedging re-executes).
+        """
+        self._infer = infer_fn
+        self.microbatch = microbatch
+        self.window = window_s
+        self.hedge_after = hedge_after_s
+        self._q: queue.Queue = queue.Queue(maxsize=queue_depth)
+        self._stop = threading.Event()
+        self.stats = ServingStats()
+        self._next_release = 0
+        self._done: dict[int, tuple] = {}
+        self._release_lock = threading.Condition()
+        self._seq = 0
+        self._seq_lock = threading.Lock()
+        self._pool = ThreadPoolExecutor(max_workers=2)  # primary + hedge
+        self._batcher = threading.Thread(target=self._run, daemon=True)
+        self._batcher.start()
+
+    # ------------------------------------------------------------ client ----
+    def submit(self, event: dict) -> Future:
+        """Backpressure: blocks when the bounded queue is full (the
+        paper's limited buffer capacity)."""
+        with self._seq_lock:
+            seq = self._seq
+            self._seq += 1
+        fut: Future = Future()
+        self._q.put((seq, time.perf_counter(), event, fut))
+        return fut
+
+    # ----------------------------------------------------------- batcher ----
+    def _collect(self):
+        items = []
+        deadline = None
+        while len(items) < self.microbatch and not self._stop.is_set():
+            timeout = self.window if deadline is None else \
+                max(1e-4, deadline - time.perf_counter())
+            try:
+                it = self._q.get(timeout=timeout)
+            except queue.Empty:
+                if items:
+                    break
+                continue
+            items.append(it)
+            if deadline is None:
+                deadline = time.perf_counter() + self.window
+            if deadline and time.perf_counter() > deadline:
+                break
+        return items
+
+    def _run_batch(self, items):
+        n = len(items)
+        pad = self.microbatch - n
+        feeds = {}
+        for key in items[0][2]:
+            arrs = [it[2][key] for it in items]
+            stacked = np.stack(arrs)
+            if pad:
+                z = np.zeros((pad, *stacked.shape[1:]), stacked.dtype)
+                stacked = np.concatenate([stacked, z])
+            feeds[key] = stacked
+        self.stats.padded_events += pad
+
+        def call():
+            return self._infer(feeds)
+
+        if self.hedge_after is not None:
+            primary = self._pool.submit(call)
+            try:
+                out = primary.result(timeout=self.hedge_after)
+            except Exception:
+                self.stats.hedged += 1
+                backup = self._pool.submit(call)
+                out = backup.result()
+        else:
+            out = call()
+        self.stats.batches += 1
+        now = time.perf_counter()
+        import jax
+        leaves, tdef = jax.tree_util.tree_flatten(out)
+        for i, (seq, t0, _, fut) in enumerate(items):
+            res = jax.tree_util.tree_unflatten(
+                tdef, [np.asarray(l)[i] for l in leaves])
+            with self._release_lock:
+                self._done[seq] = (res, t0, now, fut)
+                # strict in-order release
+                while self._next_release in self._done:
+                    r, t0r, t1r, f = self._done.pop(self._next_release)
+                    f.set_result(r)
+                    self.stats.latencies_s.append(t1r - t0r)
+                    self.stats.completed += 1
+                    self._next_release += 1
+                self._release_lock.notify_all()
+
+    def _run(self):
+        while not self._stop.is_set():
+            items = self._collect()
+            if items:
+                self._run_batch(items)
+
+    # ----------------------------------------------------------- control ----
+    def drain(self, timeout: float = 30.0):
+        t0 = time.perf_counter()
+        while (self._q.qsize() or self._done or
+               self.stats.completed < self._seq):
+            if time.perf_counter() - t0 > timeout:
+                raise TimeoutError("serving engine drain timeout")
+            time.sleep(1e-3)
+
+    def close(self):
+        self._stop.set()
+        self._batcher.join(timeout=5)
+        self._pool.shutdown(wait=False)

@@ -1,0 +1,86 @@
+"""Monitoring/visualization substrate (paper §III-B: the demonstrator's
+postprocessing + event-display pipeline, minus the webserver).
+
+- ``TriggerMonitor``: rolling trigger-rate / cluster-occupancy /
+  latency statistics with fixed-size reservoirs (cheap enough for the
+  hot path; the paper streams these to an external client).
+- ``event_display``: the 3-D event-display payload (cluster positions in
+  detector coordinates, energies, β) as JSON-serializable dicts.
+"""
+from __future__ import annotations
+
+import collections
+import json
+import time
+
+import numpy as np
+
+
+class TriggerMonitor:
+    def __init__(self, *, window: int = 4096):
+        self.window = window
+        self._trig = collections.deque(maxlen=window)
+        self._nclus = collections.deque(maxlen=window)
+        self._energy = collections.deque(maxlen=window)
+        self._lat = collections.deque(maxlen=window)
+        self.total = 0
+        self.t0 = time.perf_counter()
+
+    def record(self, cps_result, latency_s: float | None = None):
+        """cps_result: one event's CPS dict (numpy-compatible leaves)."""
+        self.total += 1
+        self._trig.append(bool(np.asarray(cps_result["trigger"])))
+        n = int(np.asarray(cps_result["n_clusters"]))
+        self._nclus.append(n)
+        if n:
+            e = np.asarray(cps_result["cluster_e"])
+            v = np.asarray(cps_result["cluster_valid"]) > 0
+            self._energy.extend(e[v].tolist())
+        if latency_s is not None:
+            self._lat.append(latency_s)
+
+    def snapshot(self) -> dict:
+        lat = np.asarray(self._lat) if self._lat else None
+        return {
+            "events": self.total,
+            "wall_s": time.perf_counter() - self.t0,
+            "rate_ev_s": self.total / max(time.perf_counter() - self.t0,
+                                          1e-9),
+            "trigger_rate": float(np.mean(self._trig)) if self._trig
+            else None,
+            "clusters_per_event": float(np.mean(self._nclus))
+            if self._nclus else None,
+            "cluster_e_mean": float(np.mean(self._energy))
+            if self._energy else None,
+            "latency_p50_us": float(np.percentile(lat, 50)) * 1e6
+            if lat is not None else None,
+            "latency_p99_us": float(np.percentile(lat, 99)) * 1e6
+            if lat is not None else None,
+        }
+
+
+def event_display(cps_result, *, event_id: int, grid=(56, 156),
+                  truth: bool | None = None) -> dict:
+    """One event's display record: cluster (θ, φ) detector coordinates
+    (cluster_xy are normalized learned coords ∈ detector units here),
+    energy and β per condensation point."""
+    valid = np.asarray(cps_result["cluster_valid"]) > 0
+    xy = np.asarray(cps_result["cluster_xy"])
+    rec = {
+        "event": int(event_id),
+        "trigger": bool(np.asarray(cps_result["trigger"])),
+        "clusters": [
+            {"theta": float((xy[i, 0] + 0.5) * grid[0]),
+             "phi": float((xy[i, 1] + 0.5) * grid[1]),
+             "energy": float(np.asarray(cps_result["cluster_e"])[i]),
+             "beta": float(np.asarray(cps_result["cluster_beta"])[i])}
+            for i in range(valid.size) if valid[i]],
+    }
+    if truth is not None:
+        rec["truth"] = bool(truth)
+    return rec
+
+
+def write_display(path: str, records: list[dict]):
+    with open(path, "w") as f:
+        json.dump(records, f, indent=1)

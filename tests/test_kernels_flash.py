@@ -1,0 +1,66 @@
+"""Flash-attention Pallas kernel vs softmax oracle (interpret mode)."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.ops import flash_attention
+
+
+def _qkv(rng, bh, s, t, d, dtype=jnp.float32):
+    q = jnp.asarray(rng.normal(size=(bh, s, d)), dtype)
+    k = jnp.asarray(rng.normal(size=(bh, t, d)), dtype)
+    v = jnp.asarray(rng.normal(size=(bh, t, d)), dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("s,t,d,bq,bk", [
+    (32, 32, 16, 16, 16), (64, 64, 32, 16, 32), (128, 128, 64, 64, 64),
+    (48, 48, 16, 16, 16), (16, 16, 8, 16, 16),
+])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_matches_oracle(s, t, d, bq, bk, causal):
+    rng = np.random.default_rng(s * 100 + d)
+    q, k, v = _qkv(rng, 3, s, t, d)
+    got = flash_attention(q, k, v, causal=causal, bq=bq, bk=bk,
+                          backend="pallas_interpret")
+    want = ref.flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_dtypes(dtype):
+    rng = np.random.default_rng(0)
+    q, k, v = _qkv(rng, 2, 32, 32, 16, dtype)
+    got = flash_attention(q, k, v, bq=16, bk=16,
+                          backend="pallas_interpret")
+    want = ref.flash_attention_ref(q, k, v)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@settings(max_examples=10, deadline=None)
+@given(s=st.sampled_from([16, 32, 48]), d=st.sampled_from([8, 16]),
+       seed=st.integers(0, 2**31 - 1))
+def test_flash_property(s, d, seed):
+    rng = np.random.default_rng(seed)
+    q, k, v = _qkv(rng, 2, s, s, d)
+    got = flash_attention(q, k, v, bq=16, bk=16,
+                          backend="pallas_interpret")
+    want = ref.flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_flash_rowsums_one():
+    """Softmax invariant: with v = ones, output is exactly ones."""
+    rng = np.random.default_rng(1)
+    q, k, _ = _qkv(rng, 2, 32, 32, 16)
+    v = jnp.ones((2, 32, 16), jnp.float32)
+    got = flash_attention(q, k, v, bq=16, bk=16,
+                          backend="pallas_interpret")
+    np.testing.assert_allclose(np.asarray(got), 1.0, rtol=1e-5)

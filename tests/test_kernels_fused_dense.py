@@ -1,0 +1,107 @@
+"""Shape/dtype sweep + property tests: fused_dense Pallas kernel vs oracle."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+
+def _rand(rng, shape, dtype):
+    x = rng.normal(size=shape).astype(np.float32)
+    return jnp.asarray(x, dtype)
+
+
+@pytest.mark.parametrize("m,k,n", [(8, 16, 8), (100, 70, 50), (128, 128, 128),
+                                   (33, 257, 65), (1, 512, 7), (256, 64, 384)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("variant", ["looped", "flattened"])
+def test_fused_dense_sweep(m, k, n, dtype, variant):
+    rng = np.random.default_rng(m * 1000 + k * 10 + n)
+    x, w = _rand(rng, (m, k), dtype), _rand(rng, (k, n), dtype)
+    b = _rand(rng, (n,), dtype)
+    got = ops.fused_dense(x, w, b, variant=variant,
+                          backend="pallas_interpret", bm=32, bn=32, bk=32)
+    want = ref.fused_dense_ref(x, w, b)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol * 10)
+
+
+@pytest.mark.parametrize("activation", ["relu", "gelu", "silu", "none"])
+def test_fused_dense_activations(activation):
+    rng = np.random.default_rng(0)
+    x, w = _rand(rng, (32, 48), jnp.float32), _rand(rng, (48, 16), jnp.float32)
+    got = ops.fused_dense(x, w, None, activation=activation,
+                          backend="pallas_interpret", bm=16, bn=16, bk=16)
+    want = ref.fused_dense_ref(x, w, None, activation=activation)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("m,k,n", [(32, 64, 32), (64, 96, 40), (17, 33, 9)])
+@pytest.mark.parametrize("out_dtype", [jnp.float32, jnp.int8])
+def test_fused_dense_int8_sweep(m, k, n, out_dtype):
+    rng = np.random.default_rng(m + k + n)
+    xq = jnp.asarray(rng.integers(-127, 128, size=(m, k)), jnp.int8)
+    wq = jnp.asarray(rng.integers(-127, 128, size=(k, n)), jnp.int8)
+    xs = jnp.asarray([[0.02]], jnp.float32)
+    ws = jnp.asarray(rng.uniform(0.001, 0.05, size=(n,)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(n,)), jnp.float32)
+    got = ops.fused_dense_int8(xq, wq, b, xs, ws, out_dtype=out_dtype,
+                               out_scale=0.1, backend="pallas_interpret",
+                               bm=16, bn=16, bk=16)
+    want = ref.fused_dense_int8_ref(xq, wq, b, xs, ws, out_dtype=out_dtype,
+                                    out_scale=0.1)
+    # int8 x int8 -> int32 accumulation is exact; epilogue is elementwise.
+    np.testing.assert_allclose(np.asarray(got, np.float64),
+                               np.asarray(want, np.float64), rtol=1e-6,
+                               atol=1e-6)
+
+
+def test_fused_dense_matches_unfused():
+    """Fusion must be semantics-preserving: Dense == relu(Linear)."""
+    rng = np.random.default_rng(1)
+    x, w = _rand(rng, (64, 32), jnp.float32), _rand(rng, (32, 24), jnp.float32)
+    b = _rand(rng, (24,), jnp.float32)
+    fused = ops.fused_dense(x, w, b, backend="pallas_interpret", bm=32,
+                            bn=8, bk=32)
+    unfused = jax.nn.relu(x @ w + b)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(unfused),
+                               rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=st.integers(1, 48), k=st.integers(1, 48), n=st.integers(1, 48),
+       seed=st.integers(0, 2**31 - 1))
+def test_fused_dense_property_padding_invariant(m, k, n, seed):
+    """Arbitrary (non-tile-aligned) shapes agree with the oracle."""
+    rng = np.random.default_rng(seed)
+    x, w = _rand(rng, (m, k), jnp.float32), _rand(rng, (k, n), jnp.float32)
+    got = ops.fused_dense(x, w, None, backend="pallas_interpret",
+                          bm=16, bn=16, bk=16)
+    want = ref.fused_dense_ref(x, w, None)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_fused_dense_int8_requant_roundtrip(seed):
+    """Requantized int8 output stays within one quantization step of f32."""
+    rng = np.random.default_rng(seed)
+    xq = jnp.asarray(rng.integers(-64, 64, size=(16, 32)), jnp.int8)
+    wq = jnp.asarray(rng.integers(-64, 64, size=(32, 16)), jnp.int8)
+    xs = jnp.asarray([[0.01]], jnp.float32)
+    ws = jnp.asarray(rng.uniform(0.001, 0.02, size=(16,)), jnp.float32)
+    out_scale = 0.05
+    y_f = ops.fused_dense_int8(xq, wq, None, xs, ws, out_dtype=jnp.float32,
+                               backend="pallas_interpret", bm=16, bn=16, bk=16)
+    y_q = ops.fused_dense_int8(xq, wq, None, xs, ws, out_dtype=jnp.int8,
+                               out_scale=out_scale,
+                               backend="pallas_interpret", bm=16, bn=16, bk=16)
+    deq = np.asarray(y_q, np.float32) * out_scale
+    clipped = np.clip(np.asarray(y_f), -127 * out_scale, 127 * out_scale)
+    assert np.max(np.abs(deq - clipped)) <= out_scale * 0.5 + 1e-6

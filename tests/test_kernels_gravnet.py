@@ -1,0 +1,118 @@
+"""Shape sweep + property tests: GravNet aggregation kernel vs oracle."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+
+def _case(rng, n, ds, df, frac_valid=0.8):
+    s = jnp.asarray(rng.normal(size=(n, ds)), jnp.float32)
+    f = jnp.asarray(rng.normal(size=(n, df)), jnp.float32)
+    mask = jnp.asarray(rng.uniform(size=n) < frac_valid, jnp.float32)
+    return s, f, mask
+
+
+@pytest.mark.parametrize("n,ds,df,k", [
+    (32, 4, 16, 8), (90, 4, 22, 6), (128, 4, 32, 8), (128, 8, 64, 16),
+    (256, 3, 24, 4), (30, 2, 8, 3),
+])
+def test_gravnet_sweep(n, ds, df, k):
+    rng = np.random.default_rng(n * 100 + ds * 10 + k)
+    s, f, mask = _case(rng, n, ds, df)
+    got = ops.gravnet_aggregate(s, f, mask, k=k, backend="pallas_interpret",
+                                bm=32)
+    want = ref.gravnet_aggregate_ref(s, f, mask, k=k)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gravnet_dtypes(dtype):
+    rng = np.random.default_rng(7)
+    s, f, mask = _case(rng, 64, 4, 16)
+    got = ops.gravnet_aggregate(s.astype(dtype), f.astype(dtype), mask, k=8,
+                                backend="pallas_interpret", bm=32)
+    want = ref.gravnet_aggregate_ref(s.astype(dtype), f.astype(dtype), mask,
+                                     k=8)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_gravnet_all_invalid_rows_zero():
+    rng = np.random.default_rng(3)
+    s, f, _ = _case(rng, 32, 4, 8)
+    mask = jnp.zeros(32, jnp.float32)
+    got = ops.gravnet_aggregate(s, f, mask, k=4, backend="pallas_interpret",
+                                bm=32)
+    np.testing.assert_array_equal(np.asarray(got), 0.0)
+
+
+def test_gravnet_single_valid_node_has_no_neighbors():
+    rng = np.random.default_rng(4)
+    s, f, _ = _case(rng, 32, 4, 8)
+    mask = jnp.zeros(32, jnp.float32).at[5].set(1.0)
+    got = np.asarray(ops.gravnet_aggregate(s, f, mask, k=4,
+                                           backend="pallas_interpret", bm=32))
+    np.testing.assert_array_equal(got[5], 0.0)  # self excluded -> nothing
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(8, 96), k=st.integers(1, 8),
+       seed=st.integers(0, 2**31 - 1))
+def test_gravnet_property_matches_oracle(n, k, seed):
+    rng = np.random.default_rng(seed)
+    s, f, mask = _case(rng, n, 4, 12)
+    got = ops.gravnet_aggregate(s, f, mask, k=k, backend="pallas_interpret",
+                                bm=16)
+    want = ref.gravnet_aggregate_ref(s, f, mask, k=k)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_gravnet_property_padding_rows_inert(seed):
+    """Appending masked-out rows never changes valid rows' outputs."""
+    rng = np.random.default_rng(seed)
+    s, f, mask = _case(rng, 48, 4, 8, frac_valid=1.0)
+    base = np.asarray(ops.gravnet_aggregate(s, f, mask, k=4,
+                                            backend="pallas_interpret", bm=16))
+    s2 = jnp.concatenate([s, jnp.asarray(rng.normal(size=(16, 4)), jnp.float32)])
+    f2 = jnp.concatenate([f, jnp.asarray(rng.normal(size=(16, 8)), jnp.float32)])
+    m2 = jnp.concatenate([mask, jnp.zeros(16, jnp.float32)])
+    ext = np.asarray(ops.gravnet_aggregate(s2, f2, m2, k=4,
+                                           backend="pallas_interpret", bm=16))
+    np.testing.assert_allclose(ext[:48], base, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_gravnet_property_permutation_equivariant(seed):
+    """Permuting nodes permutes outputs identically."""
+    rng = np.random.default_rng(seed)
+    s, f, mask = _case(rng, 40, 4, 8)
+    perm = rng.permutation(40)
+    base = np.asarray(ref.gravnet_aggregate_ref(s, f, mask, k=5))
+    permd = np.asarray(ref.gravnet_aggregate_ref(s[perm], f[perm], mask[perm],
+                                                 k=5))
+    np.testing.assert_allclose(permd, base[perm], rtol=1e-5, atol=1e-5)
+
+
+def test_gravnet_weights_decay_with_distance():
+    """A far-away cluster contributes ~0 relative to near neighbors."""
+    rng = np.random.default_rng(9)
+    near = rng.normal(size=(16, 4)).astype(np.float32) * 0.1
+    far = near + 100.0
+    s = jnp.asarray(np.concatenate([near, far]))
+    f = jnp.asarray(rng.normal(size=(32, 8)), jnp.float32)
+    mask = jnp.ones(32, jnp.float32)
+    out = np.asarray(ref.gravnet_aggregate_ref(s, f, mask, k=20))
+    # for a near node, mean-agg uses only <=15 near neighbors (plus zeros):
+    # removing the far cluster entirely must not change it
+    out_near_only = np.asarray(ref.gravnet_aggregate_ref(
+        s[:16], f[:16], mask[:16], k=20))
+    np.testing.assert_allclose(out[:16], out_near_only, rtol=1e-3, atol=1e-4)

