@@ -1,9 +1,12 @@
 """Real-time trigger serving demo (the paper's end-to-end demonstrator):
-deployment flow -> compiled pipeline -> streaming engine with strict
-in-order completion, micro-batching deadline, and an event-display JSON
-(the interactive-visualization analogue).
+deployment flow -> compiled pipeline -> sharded streaming service with
+strict in-order completion across replicas, micro-batching deadline,
+and an event-display JSON (the interactive-visualization analogue).
 
     PYTHONPATH=src python examples/serve_trigger.py
+    PYTHONPATH=src python examples/serve_trigger.py --replicas 4
+
+(extra flags are forwarded to ``repro.launch.serve``; see docs/serving.md)
 """
 import sys
 
@@ -13,6 +16,7 @@ from repro.launch import serve
 def main():
     sys.argv = [sys.argv[0], "--detector", "current", "--design-point",
                 "3", "--events", "256", "--train-steps", "200",
+                "--replicas", "2",
                 "--event-display", "/tmp/event_display.json"] \
         + sys.argv[1:]
     serve.main()

@@ -1,0 +1,4 @@
+from repro.dist.sharding import (DP, TP, logical_to_physical,
+                                 specs_from_rules)
+
+__all__ = ["DP", "TP", "logical_to_physical", "specs_from_rules"]

@@ -1,0 +1,93 @@
+"""Logical sharding axes and their resolution against a physical mesh.
+
+Model code annotates params/activations with *logical* axes (``DP`` for
+the batch/data dimension, ``TP`` for the model/tensor dimension) via
+``PartitionSpec``; ``logical_to_physical`` resolves those names against
+whatever mesh the launcher built.  This keeps the model modules
+mesh-agnostic: the same ``PARAM_RULES`` lower on the 1-device host mesh
+(axes simply vanish), on the (data, model) production mesh, and on the
+multi-pod (pod, data, model) mesh where DP spans pod×data.
+"""
+from __future__ import annotations
+
+import re
+
+from jax.sharding import PartitionSpec as P
+
+# Logical axis names used in PARAM_RULES / with_sharding_constraint calls.
+DP = "dp"      # data / batch parallel
+TP = "tp"      # tensor / model parallel
+
+# logical -> ordered physical candidates; only the ones present in the
+# mesh survive (so the host 1-device ("data","model") mesh and the
+# multi-pod ("pod","data","model") mesh both resolve).
+_LOGICAL_TO_MESH = {
+    DP: ("pod", "data"),
+    TP: ("model",),
+}
+
+
+def logical_to_physical(spec, mesh):
+    """Resolve a logical PartitionSpec into a physical one for ``mesh``.
+
+    Entries may be ``None``, a logical name ('dp'/'tp'), a physical mesh
+    axis name (passed through if the mesh has it), or a tuple of either.
+    Logical axes missing from the mesh are dropped (replicated).
+    """
+    if mesh is None:
+        return P(*([None] * len(spec)))
+    mesh_axes = set(mesh.axis_names)
+
+    def resolve_entry(entry):
+        if entry is None:
+            return None
+        names = entry if isinstance(entry, (tuple, list)) else (entry,)
+        phys = []
+        for name in names:
+            for axis in _LOGICAL_TO_MESH.get(name, (name,)):
+                if axis in mesh_axes and axis not in phys:
+                    phys.append(axis)
+        if not phys:
+            return None
+        return phys[0] if len(phys) == 1 else tuple(phys)
+
+    return P(*[resolve_entry(e) for e in spec])
+
+
+def _path_str(key_path) -> str:
+    parts = []
+    for k in key_path:
+        if hasattr(k, "key"):            # DictKey
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):          # SequenceKey
+            parts.append(str(k.idx))
+        elif hasattr(k, "name"):         # GetAttrKey
+            parts.append(str(k.name))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def specs_from_rules(params, rules):
+    """Pytree of logical PartitionSpecs from (regex, spec) rules.
+
+    Each leaf's "/"-joined key path is matched against the rules in
+    order; the first ``re.search`` hit wins, unmatched leaves are
+    replicated (``P()``).  Specs are truncated to the leaf rank so a
+    rule written for the stacked (scanned) variant of a weight also
+    applies to its unstacked form.
+    """
+    import jax
+
+    compiled = [(re.compile(pat), spec) for pat, spec in rules]
+
+    def assign(key_path, leaf):
+        path = _path_str(key_path)
+        ndim = len(getattr(leaf, "shape", ()))
+        for pat, spec in compiled:
+            if pat.search(path):
+                entries = list(spec)[:ndim] if ndim else list(spec)
+                return P(*entries)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(assign, params)

@@ -27,3 +27,18 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_host_mesh():
     """1-device mesh for smoke tests / CPU benchmarks."""
     return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def replica_devices(n_replicas: int):
+    """Device placement for the sharded serving layer.
+
+    With multiple local devices, replica i is pinned to device
+    ``i % n_devices`` (its feeds are moved there with
+    ``jax.device_put`` before dispatch).  With a single device the
+    replicas are thread-backed and share it: placement is a no-op, so
+    every entry is ``None``.
+    """
+    devs = jax.local_devices()
+    if len(devs) <= 1:
+        return [None] * n_replicas
+    return [devs[i % len(devs)] for i in range(n_replicas)]

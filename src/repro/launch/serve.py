@@ -21,7 +21,7 @@ from repro.core import caloclusternet as ccn
 from repro.core.passes.parallelize import Requirements
 from repro.core.pipeline import deploy
 from repro.data.belle2 import Belle2Config, current_detector, generate
-from repro.serving import TriggerServingEngine
+from repro.serving import ShardedTriggerService
 
 
 def main():
@@ -40,6 +40,11 @@ def main():
     ap.add_argument("--event-display", default=None,
                     help="write a JSON event display for the first N "
                          "events (monitoring pipeline analogue)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="serving replicas (thread-backed on one "
+                         "device, device-placed when several exist)")
+    ap.add_argument("--policy", default="round_robin",
+                    choices=["round_robin", "least_loaded"])
     args = ap.parse_args()
 
     if args.detector == "current":
@@ -100,10 +105,13 @@ def main():
             "mask": calib["mask"][:pipe.microbatch]}
     infer(warm)
 
-    eng = TriggerServingEngine(infer,
-                               microbatch=max(pipe.microbatch, 16),
-                               window_s=2e-3, hedge_after_s=None)
     events = generate(gen_cfg, args.events, seed=7)
+    # create the service after event generation: its stats clocks back
+    # the reported per-replica throughput
+    eng = ShardedTriggerService(infer, n_replicas=args.replicas,
+                                microbatch=max(pipe.microbatch, 16),
+                                window_s=2e-3, hedge_after_s=None,
+                                policy=args.policy)
     t0 = time.perf_counter()
     futs = []
     for i in range(args.events):
@@ -118,9 +126,18 @@ def main():
     eff = float((trig & truth).sum() / max(truth.sum(), 1))
     fake = float((trig & ~truth).sum() / max((~truth).sum(), 1))
     print(f"[serve] {args.events} events in {dt:.2f}s -> "
-          f"{args.events / dt:,.0f} ev/s (CPU)")
+          f"{args.events / dt:,.0f} ev/s (CPU, "
+          f"{args.replicas} replica(s), {args.policy})")
     print(f"[serve] latency p50={s['p50_us']:.0f}us "
           f"p99={s['p99_us']:.0f}us batches={s['batches']}")
+    bud = s["budget"]
+    print(f"[serve] budget queue_wait={bud['queue_wait_us_mean']:.0f}us "
+          f"dispatch={bud['dispatch_us_mean']:.0f}us "
+          f"compute={bud['compute_us_mean']:.0f}us")
+    for rs in s["per_replica"]:
+        print(f"[serve]   replica {rs['replica_id']}: "
+              f"{rs['completed']} events, {rs['batches']} batches, "
+              f"{rs['throughput_ev_s']:,.0f} ev/s")
     print(f"[serve] trigger efficiency={eff:.3f} fake rate={fake:.3f} "
           f"in-order=True")
     if args.event_display:

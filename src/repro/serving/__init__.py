@@ -1,1 +1,9 @@
-from repro.serving.engine import ServingStats, TriggerServingEngine
+from repro.serving.engine import (AggregateStats, ServingStats,
+                                  ShardedTriggerService,
+                                  TriggerServingEngine)
+from repro.serving.replica import InOrderReleaser, ReplicaEngine
+from repro.serving.router import POLICIES, Router
+
+__all__ = ["AggregateStats", "InOrderReleaser", "POLICIES",
+           "ReplicaEngine", "Router", "ServingStats",
+           "ShardedTriggerService", "TriggerServingEngine"]

@@ -1,170 +1,233 @@
-"""Real-time trigger serving engine.
+"""Sharded real-time trigger serving.
 
-Mirrors the paper's demonstrator runtime (§III-B): a dataflow pipeline
-that processes inference requests without host intervention, with three
-hard requirements from §I:
+Mirrors the paper's demonstrator runtime (§III-B) and scales it out:
+the paper sustains 2.94 M events/s by spatially parallelizing one
+dataflow pipeline; here a ``ShardedTriggerService`` owns N replica
+engines (each wrapping a ``deploy()``-produced executable), a router
+that shards incoming events across them, and one merged release stage
+so the three hard requirements from §I survive replication:
 
-  (1) bounded decision latency  → micro-batching window with a deadline:
-      a batch is launched when either ``microbatch`` events are queued or
-      ``window_s`` has elapsed (zero-padded, like the paper's padding of
+  (1) bounded decision latency  → per-replica micro-batching window
+      with a deadline (zero-padded, like the paper's padding of
       missing inputs);
-  (2) throughput               → batched dispatch + double buffering
-      (one batch in flight while the next fills — the FPGA pipeline
-      analogue of overlapping Load/compute/Store);
-  (3) strict in-order results  → a release stage that completes futures
-      in submission order no matter how batches finish.
+  (2) throughput                → batched dispatch + double buffering
+      per replica, and replication across devices (``jax.device_put``
+      placement when more than one device exists, thread-backed
+      virtual replicas otherwise);
+  (3) strict in-order results   → a single ``InOrderReleaser`` keyed
+      on the global submission sequence, so results complete in
+      submission order no matter which replica finishes first.
 
-Straggler mitigation: ``hedge_after_s`` re-dispatches a batch to the
-backup executor if the primary hasn't returned in time; first result
-wins (duplicate-safe because inference is pure).
+Straggler mitigation: ``hedge_after_s`` re-dispatches a batch to a
+backup lane if the primary hasn't returned in time; first result wins
+(duplicate-safe because inference is pure).
+
+``TriggerServingEngine`` (the original single-replica API) is kept as
+a thin shim over a 1-replica service.
 """
 from __future__ import annotations
 
-import dataclasses
-import queue
 import threading
 import time
-from concurrent.futures import Future, ThreadPoolExecutor
+from concurrent.futures import Future
 
 import numpy as np
 
+from repro.serving.replica import (EventTiming, InOrderReleaser,
+                                   ReplicaEngine, ServingStats)
+from repro.serving.router import POLICIES, Router
 
-@dataclasses.dataclass
-class ServingStats:
-    completed: int = 0
-    batches: int = 0
-    hedged: int = 0
-    padded_events: int = 0
-    latencies_s: list = dataclasses.field(default_factory=list)
+__all__ = ["AggregateStats", "ServingStats", "ShardedTriggerService",
+           "TriggerServingEngine", "POLICIES"]
+
+
+class AggregateStats:
+    """Merged view over the per-replica ``ServingStats``."""
+
+    def __init__(self, replicas):
+        self._replicas = replicas
+        self.started_at = time.perf_counter()
+
+    # aggregate counters mirror the ServingStats field names so callers
+    # can treat the two uniformly.
+    def _sum(self, field):
+        return sum(getattr(r.stats, field) for r in self._replicas)
+
+    @property
+    def completed(self):
+        return self._sum("completed")
+
+    @property
+    def batches(self):
+        return self._sum("batches")
+
+    @property
+    def hedged(self):
+        return self._sum("hedged")
+
+    @property
+    def padded_events(self):
+        return self._sum("padded_events")
+
+    @property
+    def latencies_s(self):
+        out = []
+        for r in self._replicas:
+            out.extend(r.stats.samples("latencies_s"))
+        return out
 
     def percentile(self, p):
-        return float(np.percentile(self.latencies_s, p)) \
-            if self.latencies_s else float("nan")
+        lat = self.latencies_s
+        return float(np.percentile(lat, p)) if lat else float("nan")
+
+    def throughput_ev_s(self):
+        dt = time.perf_counter() - self.started_at
+        return self.completed / dt if dt > 0 else 0.0
 
     def summary(self):
-        lat = self.latencies_s
-        return {
-            "completed": self.completed, "batches": self.batches,
+        lat = np.asarray(self.latencies_s)   # one merged copy per call
+
+        def merged_mean_us(field):
+            xs = []
+            for r in self._replicas:
+                xs.extend(r.stats.samples(field))
+            return float(np.mean(xs)) * 1e6 if xs else None
+
+        agg = {
+            "replicas": len(self._replicas),
+            "completed": self.completed,
+            "failed": self._sum("failed"),
+            "batches": self.batches,
             "hedged": self.hedged,
-            "p50_us": self.percentile(50) * 1e6 if lat else None,
-            "p99_us": self.percentile(99) * 1e6 if lat else None,
-            "mean_us": float(np.mean(lat)) * 1e6 if lat else None,
+            "padded_events": self.padded_events,
+            "p50_us": float(np.percentile(lat, 50)) * 1e6
+            if lat.size else None,
+            "p99_us": float(np.percentile(lat, 99)) * 1e6
+            if lat.size else None,
+            "mean_us": float(lat.mean()) * 1e6 if lat.size else None,
+            "throughput_ev_s": self.throughput_ev_s(),
+            "budget": {
+                "queue_wait_us_mean": merged_mean_us("queue_wait_s"),
+                "dispatch_us_mean": merged_mean_us("dispatch_s"),
+                "compute_us_mean": merged_mean_us("compute_s"),
+            },
         }
+        agg["per_replica"] = [r.stats.summary() for r in self._replicas]
+        return agg
 
 
-class TriggerServingEngine:
-    def __init__(self, infer_fn, *, microbatch: int, window_s: float = 1e-3,
-                 queue_depth: int = 1024, hedge_after_s: float | None = None):
-        """infer_fn: dict of stacked numpy feeds (B=microbatch) -> outputs
-        pytree with leading batch dim. Must be pure (hedging re-executes).
-        """
-        self._infer = infer_fn
+class ShardedTriggerService:
+    """N replica engines behind a sharding router and one merged
+    in-order release stage.
+
+    ``infer_fn`` maps a dict of stacked numpy feeds (B=microbatch) to
+    an output pytree with a leading batch dim, and must be pure
+    (hedging re-executes).  Pass one callable shared by every replica,
+    or a list of N callables (e.g. per-device executables).
+
+    ``devices``: ``"auto"`` places replica i on local device
+    ``i % n_devices`` via ``jax.device_put`` when more than one device
+    exists (see ``launch.mesh.replica_devices``); ``None`` keeps every
+    replica on the default device (thread-backed virtual replicas); a
+    list pins replicas explicitly.
+    """
+
+    def __init__(self, infer_fn, *, n_replicas: int = 1, microbatch: int,
+                 window_s: float = 1e-3, queue_depth: int = 1024,
+                 hedge_after_s: float | None = None,
+                 policy: str = "round_robin", devices="auto",
+                 inflight: int = 2):
+        if n_replicas < 1:
+            raise ValueError("n_replicas must be >= 1")
+        infer_fns = infer_fn if isinstance(infer_fn, (list, tuple)) \
+            else [infer_fn] * n_replicas
+        if len(infer_fns) != n_replicas:
+            raise ValueError(
+                f"got {len(infer_fns)} infer_fns for {n_replicas} replicas")
+        if devices == "auto":
+            from repro.launch.mesh import replica_devices
+            devices = replica_devices(n_replicas)
+        elif devices is None:
+            devices = [None] * n_replicas
+        if len(devices) != n_replicas:
+            raise ValueError(
+                f"got {len(devices)} devices for {n_replicas} replicas")
+
         self.microbatch = microbatch
         self.window = window_s
         self.hedge_after = hedge_after_s
-        self._q: queue.Queue = queue.Queue(maxsize=queue_depth)
-        self._stop = threading.Event()
-        self.stats = ServingStats()
-        self._next_release = 0
-        self._done: dict[int, tuple] = {}
-        self._release_lock = threading.Condition()
         self._seq = 0
         self._seq_lock = threading.Lock()
-        self._pool = ThreadPoolExecutor(max_workers=2)  # primary + hedge
-        self._batcher = threading.Thread(target=self._run, daemon=True)
-        self._batcher.start()
+        self._releaser = InOrderReleaser(self._on_release)
+        self.replicas = [
+            ReplicaEngine(fn, self._releaser, microbatch=microbatch,
+                          window_s=window_s, queue_depth=queue_depth,
+                          hedge_after_s=hedge_after_s, device=dev,
+                          replica_id=i, inflight=inflight)
+            for i, (fn, dev) in enumerate(zip(infer_fns, devices))]
+        self.router = Router(self.replicas, policy)
+        self._agg = AggregateStats(self.replicas)
 
     # ------------------------------------------------------------ client ----
     def submit(self, event: dict) -> Future:
-        """Backpressure: blocks when the bounded queue is full (the
-        paper's limited buffer capacity)."""
+        """Shard the event to a replica; returns a Future that resolves
+        in global submission order.  Blocks (backpressure) when the
+        chosen replica's bounded queue is full."""
         with self._seq_lock:
             seq = self._seq
             self._seq += 1
+            # pick under the lock so round-robin sees a gap-free seq
+            # and least-loaded sees a consistent load snapshot.
+            replica = self.router.pick(seq)
         fut: Future = Future()
-        self._q.put((seq, time.perf_counter(), event, fut))
+        replica.enqueue(seq, time.perf_counter(), event, fut)
         return fut
 
-    # ----------------------------------------------------------- batcher ----
-    def _collect(self):
-        items = []
-        deadline = None
-        while len(items) < self.microbatch and not self._stop.is_set():
-            timeout = self.window if deadline is None else \
-                max(1e-4, deadline - time.perf_counter())
-            try:
-                it = self._q.get(timeout=timeout)
-            except queue.Empty:
-                if items:
-                    break
-                continue
-            items.append(it)
-            if deadline is None:
-                deadline = time.perf_counter() + self.window
-            if deadline and time.perf_counter() > deadline:
-                break
-        return items
-
-    def _run_batch(self, items):
-        n = len(items)
-        pad = self.microbatch - n
-        feeds = {}
-        for key in items[0][2]:
-            arrs = [it[2][key] for it in items]
-            stacked = np.stack(arrs)
-            if pad:
-                z = np.zeros((pad, *stacked.shape[1:]), stacked.dtype)
-                stacked = np.concatenate([stacked, z])
-            feeds[key] = stacked
-        self.stats.padded_events += pad
-
-        def call():
-            return self._infer(feeds)
-
-        if self.hedge_after is not None:
-            primary = self._pool.submit(call)
-            try:
-                out = primary.result(timeout=self.hedge_after)
-            except Exception:
-                self.stats.hedged += 1
-                backup = self._pool.submit(call)
-                out = backup.result()
+    # ----------------------------------------------------------- release ----
+    def _on_release(self, outcome, timing: EventTiming, fut: Future):
+        st = self.replicas[timing.replica_id].stats
+        kind, value = outcome
+        if kind == "ok":
+            st.record_release(timing)
+            if not fut.cancelled():   # client gave up; stats still count
+                fut.set_result(value)
         else:
-            out = call()
-        self.stats.batches += 1
-        now = time.perf_counter()
-        import jax
-        leaves, tdef = jax.tree_util.tree_flatten(out)
-        for i, (seq, t0, _, fut) in enumerate(items):
-            res = jax.tree_util.tree_unflatten(
-                tdef, [np.asarray(l)[i] for l in leaves])
-            with self._release_lock:
-                self._done[seq] = (res, t0, now, fut)
-                # strict in-order release
-                while self._next_release in self._done:
-                    r, t0r, t1r, f = self._done.pop(self._next_release)
-                    f.set_result(r)
-                    self.stats.latencies_s.append(t1r - t0r)
-                    self.stats.completed += 1
-                    self._next_release += 1
-                self._release_lock.notify_all()
-
-    def _run(self):
-        while not self._stop.is_set():
-            items = self._collect()
-            if items:
-                self._run_batch(items)
+            st.failed += 1
+            if not fut.cancelled():
+                fut.set_exception(value)
 
     # ----------------------------------------------------------- control ----
+    @property
+    def stats(self) -> AggregateStats:
+        return self._agg
+
     def drain(self, timeout: float = 30.0):
         t0 = time.perf_counter()
-        while (self._q.qsize() or self._done or
-               self.stats.completed < self._seq):
+        while (any(r.queued for r in self.replicas)
+               or self._releaser.pending
+               or self._releaser.released < self._seq):
             if time.perf_counter() - t0 > timeout:
-                raise TimeoutError("serving engine drain timeout")
+                raise TimeoutError("serving service drain timeout")
             time.sleep(1e-3)
 
     def close(self):
-        self._stop.set()
-        self._batcher.join(timeout=5)
-        self._pool.shutdown(wait=False)
+        for r in self.replicas:
+            r.close()
+
+
+class TriggerServingEngine(ShardedTriggerService):
+    """Single-replica engine — the original demonstrator-style API.
+
+    ``stats`` is the replica's own ``ServingStats`` (mutable counters +
+    raw latency lists), exactly as before the sharded refactor."""
+
+    def __init__(self, infer_fn, *, microbatch: int, window_s: float = 1e-3,
+                 queue_depth: int = 1024,
+                 hedge_after_s: float | None = None):
+        super().__init__(infer_fn, n_replicas=1, microbatch=microbatch,
+                         window_s=window_s, queue_depth=queue_depth,
+                         hedge_after_s=hedge_after_s, devices=None)
+
+    @property
+    def stats(self) -> ServingStats:
+        return self.replicas[0].stats

@@ -1,0 +1,403 @@
+"""Per-replica serving machinery: stats, the merged in-order release
+stage, and the replica micro-batch loop.
+
+A ``ReplicaEngine`` is one lane of the sharded service: it owns a
+bounded event queue, a micro-batching collector (batch launches when
+``microbatch`` events are queued *or* ``window_s`` has elapsed — the
+paper's bounded-decision-latency deadline), and a double-buffered
+dispatch loop (up to ``inflight`` batches executing while the next
+fills, the FPGA analogue of overlapping Load/compute/Store).  Replicas
+never release results themselves: every completion is handed to a
+shared ``InOrderReleaser`` keyed on the *global* submission sequence
+number, so strict submission order is preserved across replicas no
+matter how their batches interleave.
+
+Latency budget accounting (paper §III): each event's end-to-end latency
+is split into
+
+  queue_wait — submit() until the collector pops the event;
+  dispatch   — batch assembly: fill-window residency after the pop,
+               stacking/zero-padding, and device placement;
+  compute    — the inference call itself (including any hedged retry).
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from collections import deque
+from concurrent.futures import FIRST_COMPLETED, ThreadPoolExecutor
+from concurrent.futures import TimeoutError as FuturesTimeout
+from concurrent.futures import wait as futures_wait
+
+import numpy as np
+
+# per-replica sliding window for latency/budget samples; counters stay
+# exact, percentiles reflect the most recent window.
+STAT_WINDOW = 65536
+
+
+@dataclasses.dataclass
+class EventTiming:
+    """perf_counter timestamps for one event's trip through a replica."""
+    replica_id: int
+    t_submit: float
+    t_collect: float
+    t_dispatch: float
+    t_done: float
+
+    @property
+    def latency_s(self):
+        return self.t_done - self.t_submit
+
+    @property
+    def queue_wait_s(self):
+        return self.t_collect - self.t_submit
+
+    @property
+    def dispatch_s(self):
+        return self.t_dispatch - self.t_collect
+
+    @property
+    def compute_s(self):
+        return self.t_done - self.t_dispatch
+
+
+def _pct(xs, p):
+    return float(np.percentile(np.fromiter(xs, float), p)) if xs \
+        else float("nan")
+
+
+def _stat_window():
+    return deque(maxlen=STAT_WINDOW)
+
+
+@dataclasses.dataclass
+class ServingStats:
+    """Per-replica counters + bounded sliding-window latency samples
+    (the counters are exact for the lifetime of the replica; the
+    sample deques hold the last ``STAT_WINDOW`` events so a
+    long-running service neither grows without bound nor slows down
+    ``summary()``).
+
+    ``latencies_s``/``completed`` are updated by the release stage (so
+    they observe strict release order); the batch counters are updated
+    by the replica's dispatch loop.  Readers (``summary``, monitoring
+    threads) must go through ``samples()``, which snapshots a deque
+    under the stats lock — iterating a deque while the releaser
+    appends to it raises RuntimeError.
+    """
+    replica_id: int = 0
+    submitted: int = 0
+    completed: int = 0
+    failed: int = 0
+    batches: int = 0
+    hedged: int = 0
+    padded_events: int = 0
+    latencies_s: deque = dataclasses.field(default_factory=_stat_window)
+    queue_wait_s: deque = dataclasses.field(default_factory=_stat_window)
+    dispatch_s: deque = dataclasses.field(default_factory=_stat_window)
+    compute_s: deque = dataclasses.field(default_factory=_stat_window)
+    started_at: float = dataclasses.field(
+        default_factory=time.perf_counter)
+    lock: threading.Lock = dataclasses.field(
+        default_factory=threading.Lock, repr=False, compare=False)
+
+    def samples(self, field: str) -> list:
+        """Consistent copy of one sample deque, safe against a live
+        release stage."""
+        with self.lock:
+            return list(getattr(self, field))
+
+    def percentile(self, p):
+        return _pct(self.samples("latencies_s"), p)
+
+    def record_release(self, timing: EventTiming):
+        with self.lock:
+            self.completed += 1
+            self.latencies_s.append(timing.latency_s)
+            self.queue_wait_s.append(timing.queue_wait_s)
+            self.dispatch_s.append(timing.dispatch_s)
+            self.compute_s.append(timing.compute_s)
+
+    def throughput_ev_s(self):
+        dt = time.perf_counter() - self.started_at
+        return self.completed / dt if dt > 0 else 0.0
+
+    def budget(self):
+        """Mean per-event latency-budget split, in µs."""
+        def mean_us(xs):
+            return float(np.fromiter(xs, float).mean()) * 1e6 \
+                if xs else None
+        return {
+            "queue_wait_us_mean": mean_us(self.samples("queue_wait_s")),
+            "dispatch_us_mean": mean_us(self.samples("dispatch_s")),
+            "compute_us_mean": mean_us(self.samples("compute_s")),
+        }
+
+    def summary(self):
+        lat = self.samples("latencies_s")
+        return {
+            "replica_id": self.replica_id,
+            "submitted": self.submitted,
+            "completed": self.completed,
+            "failed": self.failed,
+            "batches": self.batches,
+            "hedged": self.hedged,
+            "padded_events": self.padded_events,
+            "p50_us": _pct(lat, 50) * 1e6 if lat else None,
+            "p99_us": _pct(lat, 99) * 1e6 if lat else None,
+            "mean_us": float(np.fromiter(lat, float).mean()) * 1e6
+            if lat else None,
+            "throughput_ev_s": self.throughput_ev_s(),
+            "budget": self.budget(),
+        }
+
+
+class InOrderReleaser:
+    """Merged release stage: completes futures in global submission
+    order regardless of which replica finished first.
+
+    ``complete`` may be called from any replica's dispatch thread; the
+    shared lock serializes releases, and a completion for sequence
+    number ``k`` is only released once every ``j < k`` has been."""
+
+    def __init__(self, on_release):
+        # on_release(outcome, timing, fut); outcome is ("ok", value) or
+        # ("err", exception).
+        self._on_release = on_release
+        self._next = 0
+        self._held: dict[int, tuple] = {}
+        self._lock = threading.Condition()
+        self.released = 0
+
+    def complete(self, seq: int, outcome, timing: EventTiming, fut):
+        with self._lock:
+            self._held[seq] = (outcome, timing, fut)
+            while self._next in self._held:
+                out, tm, f = self._held.pop(self._next)
+                try:
+                    self._on_release(out, tm, f)
+                except Exception:  # noqa: BLE001 — a client-cancelled
+                    pass  # future (InvalidStateError) or a bad done-
+                    #       callback must not wedge every later seq
+                self._next += 1
+                self.released += 1
+            self._lock.notify_all()
+
+    @property
+    def pending(self) -> int:
+        with self._lock:
+            return len(self._held)
+
+
+class ReplicaEngine:
+    """One serving lane: bounded queue -> deadline micro-batcher ->
+    double-buffered dispatch -> shared in-order releaser."""
+
+    def __init__(self, infer_fn, releaser: InOrderReleaser, *,
+                 microbatch: int, window_s: float = 1e-3,
+                 queue_depth: int = 1024, hedge_after_s: float | None = None,
+                 device=None, replica_id: int = 0, inflight: int = 2):
+        self._infer = infer_fn
+        self._releaser = releaser
+        self.microbatch = microbatch
+        self.window = window_s
+        self.hedge_after = hedge_after_s
+        self.device = device
+        self.replica_id = replica_id
+        self.stats = ServingStats(replica_id=replica_id)
+        self._q: queue.Queue = queue.Queue(maxsize=queue_depth)
+        self._stop = threading.Event()
+        self._count_lock = threading.Lock()
+        self._inflight_sem = threading.Semaphore(inflight)
+        self._dispatch_pool = ThreadPoolExecutor(
+            max_workers=inflight,
+            thread_name_prefix=f"replica{replica_id}-dispatch")
+        self._hedge_pool = ThreadPoolExecutor(
+            max_workers=2 * inflight,
+            thread_name_prefix=f"replica{replica_id}-hedge") \
+            if hedge_after_s is not None else None
+        self._batcher = threading.Thread(
+            target=self._run, daemon=True,
+            name=f"replica{replica_id}-batcher")
+        self._batcher.start()
+
+    # ------------------------------------------------------------ intake ----
+    def enqueue(self, seq: int, t_submit: float, event: dict, fut):
+        """Blocks when the bounded queue is full (the paper's limited
+        buffer capacity -> backpressure on the client).  A close() that
+        happens while we are blocked (or raced with the put) fails this
+        event's future instead of stranding it in a dead queue."""
+        with self._count_lock:
+            self.stats.submitted += 1
+        item = (seq, t_submit, event, fut)
+        placed = False
+        while not placed and not self._stop.is_set():
+            try:
+                self._q.put(item, timeout=0.1)
+                placed = True
+            except queue.Full:
+                continue
+        if not placed:
+            self._fail_items([item])
+        elif self._stop.is_set():
+            self._fail_queued()   # put may have landed after close()
+
+    def load(self) -> int:
+        """Events accepted but not yet released — the least-loaded
+        router's ranking signal."""
+        return self.stats.submitted - self.stats.completed \
+            - self.stats.failed
+
+    @property
+    def queued(self) -> int:
+        return self._q.qsize()
+
+    # ----------------------------------------------------------- batcher ----
+    def _collect(self):
+        items = []
+        deadline = None
+        while len(items) < self.microbatch and not self._stop.is_set():
+            timeout = self.window if deadline is None else \
+                max(1e-4, deadline - time.perf_counter())
+            try:
+                seq, t_submit, event, fut = self._q.get(timeout=timeout)
+            except queue.Empty:
+                if items:
+                    break
+                continue
+            items.append((seq, t_submit, time.perf_counter(), event, fut))
+            if deadline is None:
+                deadline = time.perf_counter() + self.window
+            if deadline and time.perf_counter() > deadline:
+                break
+        return items
+
+    def _run(self):
+        while not self._stop.is_set():
+            items = self._collect()
+            if not items:
+                continue
+            # double buffering: hand the batch to the dispatch pool and
+            # immediately go back to collecting the next one; the
+            # semaphore bounds how many batches are in flight.
+            acquired = False
+            while not (acquired := self._inflight_sem.acquire(timeout=0.1)):
+                if self._stop.is_set():
+                    break
+            if not acquired:
+                self._fail_items(items)   # closing: don't strand futures
+                return
+            self._dispatch_pool.submit(self._dispatch, items)
+
+    def _fail_items(self, items):
+        """Fail events that will never be dispatched — routed through
+        the shared releaser so their sequence numbers still advance
+        ``_next``; bypassing it would hold every later sequence (on any
+        replica) hostage forever.  Accepts both queue items
+        (seq, t_submit, event, fut) and collected items
+        (seq, t_submit, t_collect, event, fut)."""
+        exc = RuntimeError("serving replica closed before dispatch")
+        now = time.perf_counter()
+        for it in items:
+            seq, t_submit, fut = it[0], it[1], it[-1]
+            t_collect = it[2] if len(it) == 5 else now
+            timing = EventTiming(self.replica_id, t_submit, t_collect,
+                                 now, now)
+            self._releaser.complete(seq, ("err", exc), timing, fut)
+
+    def _dispatch(self, items):
+        try:
+            self._run_batch(items)
+        finally:
+            self._inflight_sem.release()
+
+    def _run_batch(self, items):
+        n = len(items)
+        pad = self.microbatch - n
+        feeds = {}
+        for key in items[0][3]:
+            stacked = np.stack([it[3][key] for it in items])
+            if pad:
+                z = np.zeros((pad, *stacked.shape[1:]), stacked.dtype)
+                stacked = np.concatenate([stacked, z])
+            feeds[key] = stacked
+        with self._count_lock:
+            # batches counts *launched* batches — a failing inference
+            # below still launched one.
+            self.stats.batches += 1
+            self.stats.padded_events += pad
+        if self.device is not None:
+            import jax
+            feeds = jax.device_put(feeds, self.device)
+        t_dispatch = time.perf_counter()
+        try:
+            out = self._call(feeds)
+        except Exception as exc:  # noqa: BLE001 — fault isolation: fail
+            t_done = time.perf_counter()   # the batch, not the replica
+            for seq, t_submit, t_collect, _, fut in items:
+                timing = EventTiming(self.replica_id, t_submit, t_collect,
+                                     t_dispatch, t_done)
+                self._releaser.complete(seq, ("err", exc), timing, fut)
+            return
+        import jax
+        leaves, tdef = jax.tree_util.tree_flatten(out)
+        # materialize BEFORE stamping t_done: under jax async dispatch
+        # the call above returns unfinished arrays, and the compute
+        # budget must include the actual device time.
+        np_leaves = [np.asarray(l) for l in leaves]
+        t_done = time.perf_counter()
+        for i, (seq, t_submit, t_collect, _, fut) in enumerate(items):
+            res = jax.tree_util.tree_unflatten(
+                tdef, [l[i] for l in np_leaves])
+            timing = EventTiming(self.replica_id, t_submit, t_collect,
+                                 t_dispatch, t_done)
+            self._releaser.complete(seq, ("ok", res), timing, fut)
+
+    def _call(self, feeds):
+        if self.hedge_after is None:
+            return self._infer(feeds)
+        primary = self._hedge_pool.submit(self._infer, feeds)
+        try:
+            return primary.result(timeout=self.hedge_after)
+        except FuturesTimeout:
+            pass  # straggler: hedge below. Real faults propagate to
+            #       the batch-failure path instead of being re-run.
+        with self._count_lock:
+            self.stats.hedged += 1
+        # re-dispatch to the backup lane and take whichever lane
+        # returns first (duplicate-safe because inference is pure);
+        # a lane that *fails* defers to the other one.
+        backup = self._hedge_pool.submit(self._infer, feeds)
+        lanes = {primary, backup}
+        last_exc = None
+        while lanes:
+            done, lanes = futures_wait(lanes, return_when=FIRST_COMPLETED)
+            for lane in done:
+                if lane.exception() is None:
+                    return lane.result()
+                last_exc = lane.exception()
+        raise last_exc
+
+    # ----------------------------------------------------------- control ----
+    def _fail_queued(self):
+        """Fail anything still queued so no client hangs in
+        fut.result(); idempotent — also called from a racing enqueue."""
+        leftovers = []
+        while True:
+            try:
+                leftovers.append(self._q.get_nowait())
+            except queue.Empty:
+                break
+        if leftovers:
+            self._fail_items(leftovers)
+
+    def close(self):
+        self._stop.set()
+        self._batcher.join(timeout=5)
+        self._dispatch_pool.shutdown(wait=True)
+        if self._hedge_pool is not None:
+            self._hedge_pool.shutdown(wait=False)
+        self._fail_queued()

@@ -1,0 +1,29 @@
+"""Event sharding across replica engines.
+
+Two policies, both O(1) per event:
+
+  round_robin  — event ``seq`` goes to replica ``seq % N``; perfectly
+                 even, deterministic (the testable default);
+  least_loaded — event goes to the replica with the fewest accepted-
+                 but-unreleased events (ties break by replica index),
+                 which absorbs skew when one replica hedges or runs on
+                 a slower device.
+"""
+from __future__ import annotations
+
+POLICIES = ("round_robin", "least_loaded")
+
+
+class Router:
+    def __init__(self, replicas, policy: str = "round_robin"):
+        if policy not in POLICIES:
+            raise ValueError(
+                f"unknown shard policy {policy!r}; expected one of "
+                f"{POLICIES}")
+        self.replicas = list(replicas)
+        self.policy = policy
+
+    def pick(self, seq: int):
+        if self.policy == "round_robin":
+            return self.replicas[seq % len(self.replicas)]
+        return min(self.replicas, key=lambda r: (r.load(), r.replica_id))

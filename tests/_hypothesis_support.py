@@ -1,0 +1,39 @@
+"""Property-based tests degrade to skips when ``hypothesis`` is absent.
+
+The container image does not always ship hypothesis (it is listed in
+``requirements-dev.txt``); importing it unconditionally made every
+module that declares a property test fail at *collection*, taking the
+whole tier-1 suite down with it.  Test modules import the decorators
+from here instead: with hypothesis installed they are the real thing,
+without it ``@given`` turns the test into an explicit skip while the
+rest of the module keeps running.
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """Stand-in for ``hypothesis.strategies``: every attribute is a
+        callable returning None (the strategies are never drawn from)."""
+
+        def __getattr__(self, _name):
+            return lambda *a, **k: None
+
+    st = _AnyStrategy()
+
+    def settings(*_a, **_k):
+        return lambda fn: fn
+
+    def given(*_a, **_k):
+        def deco(fn):
+            @pytest.mark.skip(reason="hypothesis not installed")
+            def _skipped():
+                pass
+            _skipped.__name__ = fn.__name__
+            _skipped.__doc__ = fn.__doc__
+            return _skipped
+        return deco

@@ -3,7 +3,7 @@ retrieval scoring."""
 import numpy as np
 import jax
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+from _hypothesis_support import given, settings, st
 
 from repro.data.recsys import mind_batch
 from repro.models import recsys

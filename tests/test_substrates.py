@@ -7,7 +7,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_support import given, settings, st
 
 from repro.checkpoint import CheckpointManager, restore, save
 from repro.checkpoint.manager import latest_step
@@ -94,7 +94,10 @@ def test_compressed_psum_error_feedback():
     acc_t = jnp.zeros_like(x)
 
     def one(x, err):
-        f = jax.shard_map(
+        shard_map = getattr(jax, "shard_map", None)
+        if shard_map is None:  # pre-0.6 jax keeps it in experimental
+            from jax.experimental.shard_map import shard_map
+        f = shard_map(
             lambda a, e: compressed_psum(a, e, "dp", 1), mesh=mesh,
             in_specs=(jax.sharding.PartitionSpec(),) * 2,
             out_specs=(jax.sharding.PartitionSpec(),) * 2)
