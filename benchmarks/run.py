@@ -6,18 +6,24 @@ Prints ``name,us_per_call,derived`` CSV rows.
   p_sweep_*   — §III-A spatial-parallelization search curve
   kernel_*    — kernel-level optimization microbenchmarks
   roofline_*  — §Roofline terms per (arch × shape) from the dry-run
+  tuning_*    — autotuned vs default kernel configs (tuning cache)
+
+A failing section is still reported as a ``name,nan,ERROR ...`` row (so
+one broken figure never hides the others), but the run exits nonzero —
+CI must see a broken benchmark section, not a green job with NaN rows.
 """
 from __future__ import annotations
 
 import sys
 
 
-def main() -> None:
+def main(argv: list[str] | None = None) -> int:
     from benchmarks import (design_points, kernels_bench,
                             parallelization_sweep, resource_table,
-                            roofline)
+                            roofline, tuning_bench)
+    argv = sys.argv[1:] if argv is None else argv
     print("name,us_per_call,derived")
-    only = sys.argv[1] if len(sys.argv) > 1 else None
+    only = argv[0] if argv else None
     sections = {
         "design_points": lambda: (design_points.run("upgrade"),
                                   design_points.run("current")),
@@ -25,15 +31,26 @@ def main() -> None:
         "parallelization_sweep": parallelization_sweep.run,
         "kernels": kernels_bench.run,
         "roofline": roofline.run,
+        "tuning": tuning_bench.run,
     }
+    if only is not None and only not in sections:
+        print(f"unknown section {only!r}; have: {', '.join(sections)}",
+              file=sys.stderr)
+        return 2
+    failed = []
     for name, fn in sections.items():
         if only and only != name:
             continue
         try:
             fn()
-        except Exception as e:  # report and continue
+        except Exception as e:  # report and continue to the next section
             print(f"{name},nan,ERROR {e!r}")
+            failed.append(name)
+    if failed:
+        print(f"FAILED sections: {', '.join(failed)}", file=sys.stderr)
+        return 1
+    return 0
 
 
 if __name__ == '__main__':
-    main()
+    sys.exit(main())

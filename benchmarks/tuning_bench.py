@@ -1,0 +1,86 @@
+"""Autotuner benchmark: search the kernel-config space for every
+problem the deployed trigger pipeline emits (plus an LM flash-attention
+prefill cell) and report tuned-vs-default times.
+
+Prints harness CSV rows (``name,us_per_call,derived``) and, with
+``--out``, writes the tuning trajectory JSON:
+
+    PYTHONPATH=src python benchmarks/tuning_bench.py --out BENCH_tuning.json
+    PYTHONPATH=src python -m benchmarks.run tuning
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+if __package__ in (None, ""):   # script invocation: put repo root first
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+
+from benchmarks.common import row
+
+
+def run(out_path: str | None = None, iters: int = 5):
+    import jax
+
+    import repro.core.caloclusternet as ccn
+    from repro.core.passes.parallelize import Requirements
+    from repro.core.pipeline import deploy
+    from repro.data.belle2 import Belle2Config, generate
+    from repro.tuning import TuningCache, autotune_graph, tune_flash_attention
+
+    cfg = ccn.CCNConfig()
+    params = ccn.init(jax.random.PRNGKey(0), cfg)
+    graph = ccn.to_graph(params, cfg)
+    data = generate(Belle2Config(), 64, seed=3)
+    feeds = {"hits": data["feats"], "mask": data["mask"]}
+    req = Requirements(design_point=3, platform="cpu",
+                       precision_policy="mixed", n_hits=cfg.n_hits,
+                       target_throughput=5e4, max_latency_s=2e-3)
+    pipe = deploy(graph, req, calibration_feeds=feeds)
+
+    cache = TuningCache()
+    n = autotune_graph(pipe.graph, n_rows=cfg.n_hits, backend=pipe.backend,
+                       cache=cache, iters=iters)
+    # beyond the trigger pipeline: an LM prefill attention cell
+    tune_flash_attention(8, 512, 512, 64, backend="xla", cache=cache,
+                         iters=iters)
+    # one real multi-candidate search: interpret-mode Pallas, where the
+    # launch knobs change the launched kernel even on CPU (the 'xla'
+    # rows above record heuristic defaults only — knob-inert backend)
+    from repro.tuning import tune_fused_dense
+    tune_fused_dense(128, 64, 64, backend="pallas_interpret", cache=cache,
+                     iters=max(1, iters // 2))
+
+    rows = []
+    trajectory = []
+    for key, e in sorted(cache.entries().items(),
+                         key=lambda kv: kv[0].encode()):
+        speedup = e.default_us / e.us if e.us else 1.0
+        rows.append(row(f"tuning_{key.encode().replace(',', ';')}", e.us,
+                        f"default {e.default_us:.1f}us "
+                        f"speedup {speedup:.2f}x "
+                        f"({e.candidates} candidates) -> {e.config}"))
+        trajectory.append({
+            "key": key.encode(), "config": e.config, "us": e.us,
+            "default_us": e.default_us, "speedup": speedup,
+            "candidates": e.candidates,
+        })
+    if out_path:
+        with open(out_path, "w") as f:
+            json.dump(trajectory, f, indent=1)
+            f.write("\n")
+        print(f"# tuning trajectory ({n} graph problems) -> {out_path}")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=None,
+                    help="write the tuning trajectory JSON here")
+    ap.add_argument("--iters", type=int, default=5)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(out_path=args.out, iters=args.iters)

@@ -22,6 +22,14 @@ TPU analogues applied here (design ③):
 4. **Whole-pipeline jit** — the executor compiles the entire graph as one
    XLA program instead of one dispatch per segment (removes the
    heterogeneous-boundary overhead the paper measured in design ①).
+
+Variant/block selection consults the persistent tuning cache
+(``repro.tuning``) when one is supplied: a cached winner for the exact
+(kernel, shape, dtype, backend) problem overrides the heuristic below,
+because LL-GNN-style studies show the latency-optimal config is
+shape-dependent and must be searched. With no cache (or on any miss)
+the heuristic is used unchanged — an empty cache reproduces today's
+bindings bit-for-bit (tested).
 """
 from __future__ import annotations
 
@@ -29,6 +37,8 @@ from repro.core.graph_ir import Graph
 
 FLATTEN_ROWS = 512        # rows (hits × microbatch) below which we flatten
 FLATTEN_DIM = 1024        # max feature dim for the flattened variant
+
+_FUSED_DENSE_KNOBS = ("variant", "bm", "bn", "bk")
 
 
 def _pick_block(v: int, cap: int) -> int:
@@ -38,23 +48,65 @@ def _pick_block(v: int, cap: int) -> int:
     return p
 
 
-def kernel_optimize(g: Graph, *, n_rows: int = 128) -> Graph:
+def fused_dense_shape(op, n_rows: int) -> tuple[int, int, int]:
+    """(rows, d_in, d_out) of the matmul this op launches per step —
+    the tuning-cache problem shape (shared with the autotuner)."""
+    d_in = op.params["w"].shape[0]
+    d_out = op.out_dim or op.params["w"].shape[1]
+    rows = n_rows * op.attrs_opt.get("P", 1)
+    return rows, d_in, d_out
+
+
+def fused_dense_dtype(op) -> str:
+    """The dtype the executor will actually run this dense in."""
+    if op.precision == "int8":
+        return "int8"
+    if op.precision == "bf16":
+        return "bf16"
+    return "float32"
+
+
+def kernel_optimize(g: Graph, *, n_rows: int = 128, tuning_cache=None,
+                    backend: str = "xla") -> Graph:
     g = g.clone()
 
-    # 1. variant selection / block tuning
+    # 1. variant selection / block tuning (cached winner > heuristic)
     for op in g:
         if op.template != "fused_dense":
             continue
-        d_in = op.params["w"].shape[0]
-        d_out = op.out_dim or op.params["w"].shape[1]
-        rows = n_rows * op.attrs_opt.get("P", 1)
-        if rows <= FLATTEN_ROWS and max(d_in, d_out) <= FLATTEN_DIM:
+        rows, d_in, d_out = fused_dense_shape(op, n_rows)
+        tuned = None
+        if tuning_cache is not None:
+            from repro.tuning.cache import fused_dense_key
+            tuned = tuning_cache.lookup(fused_dense_key(
+                rows, d_in, d_out, fused_dense_dtype(op), backend))
+        if tuned is not None:
+            for knob in _FUSED_DENSE_KNOBS:
+                if knob in tuned:
+                    op.attrs_opt[knob] = tuned[knob]
+            # provenance: the executor only overrides its built-in int8
+            # block defaults for configs that were actually searched
+            op.attrs_opt["tuned"] = True
+        elif rows <= FLATTEN_ROWS and max(d_in, d_out) <= FLATTEN_DIM:
             op.attrs_opt["variant"] = "flattened"
         else:
             op.attrs_opt["variant"] = "looped"
             op.attrs_opt["bm"] = _pick_block(rows, 512)
             op.attrs_opt["bn"] = _pick_block(d_out, 512)
             op.attrs_opt["bk"] = _pick_block(d_in, 2048)
+
+    # 1b. gravnet row-tile: cache-only (the kernel's own default is the
+    # heuristic; a miss leaves attrs_opt untouched → identical bindings)
+    if tuning_cache is not None:
+        from repro.tuning.cache import gravnet_key
+        for op in g:
+            if op.op_type != "gravnet_aggregate":
+                continue
+            tuned = tuning_cache.lookup(gravnet_key(
+                n_rows, op.attrs["d_s"], op.attrs["d_f"], op.attrs["k"],
+                "float32", backend))
+            if tuned is not None and "bm" in tuned:
+                op.attrs_opt["bm"] = tuned["bm"]
 
     # 2. retile cancellation: retile(B->A) after retile(A->B) bypasses both
     changed = True

@@ -137,11 +137,19 @@ class _Executor:
                 wq = jnp.pad(wq, ((0, xq2.shape[-1] - wq.shape[0]), (0, 0)))
             emit8 = op.attrs_opt.get("emit_int8", False)
             out_scale = op.attrs.get("act_scale", 1.0)
+            # autotuned block shapes bind here only when the config was
+            # actually searched ('tuned'); the heuristic's fp-oriented
+            # blocks never silently replace the int8 wrapper defaults
+            blocks = {}
+            if op.attrs_opt.get("tuned"):
+                blocks = {"bm": op.attrs_opt.get("bm", 128),
+                          "bn": op.attrs_opt.get("bn", 128),
+                          "bk": op.attrs_opt.get("bk", 512)}
             y = kops.fused_dense_int8(
                 xq2, wq, b, jnp.asarray(in_scale, jnp.float32).reshape(1, 1),
                 wscale,
                 activation=act, out_dtype=jnp.int8 if emit8 else jnp.float32,
-                out_scale=out_scale, backend=self.backend)
+                out_scale=out_scale, backend=self.backend, **blocks)
             y = y.reshape(*lead, y.shape[-1])
             return QTensor(y, out_scale) if emit8 else y
         # float path (fp/bf16 or uncalibrated int8 falls back to fp)
@@ -167,7 +175,7 @@ class _Executor:
         ff = _as_fp(f)[..., :df]
         agg = jax.vmap(lambda a, b_, m: kops.gravnet_aggregate(
             a, b_, m, k=op.attrs["k"], scale=op.attrs["scale"],
-            backend=self.backend))(sf, ff, mask)
+            bm=op.attrs_opt.get("bm"), backend=self.backend))(sf, ff, mask)
         if prec == "int8" and "act_scale" in op.attrs:
             # model 8-bit FPGA-fabric arithmetic: snap to the int8 grid
             sc = op.attrs["act_scale"]
@@ -370,8 +378,8 @@ class CompiledPipeline:
 
 # -------------------------------------------------------------------- deploy ----
 def deploy(model_graph: Graph, req: Requirements, *,
-           calibration_feeds=None, kernel_backend: str | None = None
-           ) -> CompiledPipeline:
+           calibration_feeds=None, kernel_backend: str | None = None,
+           tuning_cache=None) -> CompiledPipeline:
     backend = kernel_backend or ("pallas" if req.platform == "tpu" else "xla")
     from repro.core.passes.verify import verify
     verify(model_graph)  # legality check before any rewrite
@@ -392,7 +400,8 @@ def deploy(model_graph: Graph, req: Requirements, *,
                                      "model_throughput_ev_s": None,
                                      "target": req.target_throughput}
     if req.design_point >= 3:
-        g = kernel_optimize(g, n_rows=req.n_hits)
+        g = kernel_optimize(g, n_rows=req.n_hits, tuning_cache=tuning_cache,
+                            backend=backend)
     pipe = CompiledPipeline(g, req, backend)
     if req.precision_policy == "mixed":
         if calibration_feeds is None:

@@ -45,6 +45,14 @@ def main():
                          "device, device-placed when several exist)")
     ap.add_argument("--policy", default="round_robin",
                     choices=["round_robin", "least_loaded"])
+    ap.add_argument("--tuning-cache", default=None, metavar="PATH",
+                    help="JSON kernel-tuning cache consulted when "
+                         "binding kernels and warming replicas "
+                         "(absent/corrupt -> heuristic defaults)")
+    ap.add_argument("--tune", action="store_true",
+                    help="autotune this deployment's kernel shapes "
+                         "before serving; winners are persisted to "
+                         "--tuning-cache when given")
     args = ap.parse_args()
 
     if args.detector == "current":
@@ -93,7 +101,28 @@ def main():
                        target_throughput=args.target_throughput,
                        max_latency_s=2e-3,
                        tpu_native_gravnet=args.tpu_native_gravnet)
-    pipe = deploy(graph, req, calibration_feeds=feeds)
+    cache = None
+    if args.tuning_cache or args.tune:
+        from repro.tuning import TuningCache
+        cache = TuningCache.load(args.tuning_cache) if args.tuning_cache \
+            else TuningCache()
+        if cache.load_error:
+            print(f"[serve] WARNING: {cache.load_error}; "
+                  "falling back to heuristic kernel defaults")
+    pipe = deploy(graph, req, calibration_feeds=feeds, tuning_cache=cache)
+    if args.tune:
+        from repro.tuning import autotune_graph
+        n_new = autotune_graph(pipe.graph, n_rows=cfg.n_hits,
+                               backend=pipe.backend, cache=cache,
+                               verbose=True)
+        print(f"[serve] autotuned {n_new} kernel problem(s), "
+              f"cache holds {len(cache)}")
+        if args.tuning_cache:
+            cache.save(args.tuning_cache)
+            print(f"[serve] tuning cache -> {args.tuning_cache}")
+        if n_new:   # rebind kernels with the fresh winners
+            pipe = deploy(graph, req, calibration_feeds=feeds,
+                          tuning_cache=cache)
     print(f"[serve] deployed design ③{args.design_point} "
           f"segments={len(pipe.segments)} P={pipe.par}")
 
@@ -108,10 +137,18 @@ def main():
     events = generate(gen_cfg, args.events, seed=7)
     # create the service after event generation: its stats clocks back
     # the reported per-replica throughput
+    warmup_fn = None
+    if cache is not None and len(cache):
+        from repro.tuning import make_warmup
+        warmup_fn = make_warmup(cache, backend=pipe.backend)
     eng = ShardedTriggerService(infer, n_replicas=args.replicas,
                                 microbatch=max(pipe.microbatch, 16),
                                 window_s=2e-3, hedge_after_s=None,
-                                policy=args.policy)
+                                policy=args.policy, warmup_fn=warmup_fn)
+    if warmup_fn is not None:
+        print(f"[serve] replicas warmed "
+              f"{sum(r.warmed for r in eng.replicas)} cached kernel "
+              f"shape(s) at startup")
     t0 = time.perf_counter()
     futs = []
     for i in range(args.events):

@@ -130,13 +130,22 @@ class ShardedTriggerService:
     exists (see ``launch.mesh.replica_devices``); ``None`` keeps every
     replica on the default device (thread-backed virtual replicas); a
     list pins replicas explicitly.
+
+    ``warmup_fn``: optional no-arg callable run at startup, before
+    traffic — pass ``repro.tuning.make_warmup(cache)`` so engines
+    pre-compile every kernel shape the tuning cache knows about
+    instead of paying jit tracing on the first real event. It runs
+    once per *distinct device* (the jit cache is per-device, so
+    thread-backed replicas sharing one device would re-execute an
+    already-hot cache N times for nothing). Best-effort: failures are
+    swallowed and the replicas start anyway.
     """
 
     def __init__(self, infer_fn, *, n_replicas: int = 1, microbatch: int,
                  window_s: float = 1e-3, queue_depth: int = 1024,
                  hedge_after_s: float | None = None,
                  policy: str = "round_robin", devices="auto",
-                 inflight: int = 2):
+                 inflight: int = 2, warmup_fn=None):
         if n_replicas < 1:
             raise ValueError("n_replicas must be >= 1")
         infer_fns = infer_fn if isinstance(infer_fn, (list, tuple)) \
@@ -159,12 +168,17 @@ class ShardedTriggerService:
         self._seq = 0
         self._seq_lock = threading.Lock()
         self._releaser = InOrderReleaser(self._on_release)
-        self.replicas = [
-            ReplicaEngine(fn, self._releaser, microbatch=microbatch,
-                          window_s=window_s, queue_depth=queue_depth,
-                          hedge_after_s=hedge_after_s, device=dev,
-                          replica_id=i, inflight=inflight)
-            for i, (fn, dev) in enumerate(zip(infer_fns, devices))]
+        self.replicas = []
+        warmed_devices = set()
+        for i, (fn, dev) in enumerate(zip(infer_fns, devices)):
+            wf = warmup_fn if dev not in warmed_devices else None
+            warmed_devices.add(dev)
+            self.replicas.append(
+                ReplicaEngine(fn, self._releaser, microbatch=microbatch,
+                              window_s=window_s, queue_depth=queue_depth,
+                              hedge_after_s=hedge_after_s, device=dev,
+                              replica_id=i, inflight=inflight,
+                              warmup_fn=wf))
         self.router = Router(self.replicas, policy)
         self._agg = AggregateStats(self.replicas)
 

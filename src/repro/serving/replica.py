@@ -199,7 +199,8 @@ class ReplicaEngine:
     def __init__(self, infer_fn, releaser: InOrderReleaser, *,
                  microbatch: int, window_s: float = 1e-3,
                  queue_depth: int = 1024, hedge_after_s: float | None = None,
-                 device=None, replica_id: int = 0, inflight: int = 2):
+                 device=None, replica_id: int = 0, inflight: int = 2,
+                 warmup_fn=None):
         self._infer = infer_fn
         self._releaser = releaser
         self.microbatch = microbatch
@@ -208,6 +209,22 @@ class ReplicaEngine:
         self.device = device
         self.replica_id = replica_id
         self.stats = ServingStats(replica_id=replica_id)
+        # warm-up (e.g. replaying tuning-cache winners so the jit cache
+        # is hot) runs BEFORE the batcher thread starts accepting work:
+        # the first real event must never pay compilation. Best-effort —
+        # a failing warm-up must not kill the lane.
+        self.warmed = 0
+        if warmup_fn is not None:
+            try:
+                if self.device is not None:
+                    import jax
+                    with jax.default_device(self.device):
+                        out = warmup_fn()
+                else:
+                    out = warmup_fn()
+                self.warmed = int(out) if isinstance(out, int) else 1
+            except Exception:  # noqa: BLE001
+                self.warmed = 0
         self._q: queue.Queue = queue.Queue(maxsize=queue_depth)
         self._stop = threading.Event()
         self._count_lock = threading.Lock()

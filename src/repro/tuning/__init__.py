@@ -1,0 +1,32 @@
+"""Autotuned kernel variant search with a persistent tuning cache.
+
+Three pieces:
+
+- ``cache`` — the JSON ``TuningCache`` keyed by
+  (kernel, shape, dtype, backend), with graceful fallback to heuristic
+  defaults when the file is absent, corrupt, or stale;
+- ``candidates``/``autotune`` — the per-kernel search spaces and the
+  measuring loop (``autotune_graph`` tunes every shape a
+  deploy-optimized IR graph emits);
+- ``warmup`` — replica startup warm-up that replays cached winners so
+  serving never pays first-request compilation.
+
+Consumers: ``core/passes/kernel_opt.py`` binds cached winners at
+design point ③; ``serving`` warms engines from the cache;
+``launch/serve.py`` exposes ``--tune`` / ``--tuning-cache``.
+"""
+from repro.tuning.autotune import (autotune_graph, graph_kernel_problems,
+                                   tune_flash_attention, tune_fused_dense,
+                                   tune_gravnet)
+from repro.tuning.cache import (SCHEMA_VERSION, KernelKey, TuningCache,
+                                TuningEntry, flash_attention_key,
+                                fused_dense_key, gravnet_key)
+from repro.tuning.warmup import make_warmup, warm_from_cache
+
+__all__ = [
+    "SCHEMA_VERSION", "KernelKey", "TuningCache", "TuningEntry",
+    "autotune_graph", "flash_attention_key", "fused_dense_key",
+    "graph_kernel_problems", "gravnet_key", "make_warmup",
+    "tune_flash_attention", "tune_fused_dense", "tune_gravnet",
+    "warm_from_cache",
+]

@@ -1,0 +1,229 @@
+"""Kernel autotuner: measure candidate configs, persist winners.
+
+``tune_*`` functions benchmark one kernel at one problem shape through
+the public ``repro.kernels.ops`` wrappers (so padding, jit, and backend
+dispatch cost exactly what production calls cost) and write the winner
+into a ``TuningCache``. ``autotune_graph`` walks a deploy-optimized IR
+graph and tunes every kernel shape the pipeline actually emits — the
+shapes are derived by the same rules ``kernel_opt`` uses to bind
+kernels, so a subsequent ``deploy(..., tuning_cache=...)`` hits every
+entry.
+
+The default candidate (today's heuristic) is always measured first and
+only dethroned by a ``min_gain`` relative win (default 3%), so timer
+noise can never tune the pipeline *below* its untuned performance.
+
+On the ``'xla'`` backend the kernel wrappers take the jnp reference
+path and *ignore* every launch knob (variant/blocks), so searching
+there would time N identical programs and record noise as winners.
+Knob-inert backends therefore record the heuristic default only
+(one measurement — the cache entry still drives serving warm-up at
+the right shapes); the real search runs on ``'pallas'`` /
+``'pallas_interpret'`` where the knobs change the launched kernel.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.tuning import candidates as cand
+from repro.tuning.cache import (KernelKey, TuningCache, flash_attention_key,
+                                fused_dense_key, gravnet_key)
+
+MIN_GAIN = 0.03
+
+# backends whose ops wrappers ignore launch knobs (jnp reference path):
+# tuning degenerates to timing the default config once
+_KNOB_INERT_BACKENDS = frozenset({"xla"})
+
+
+def _time_call(fn, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Min seconds per call with block_until_ready. Min, not median:
+    scheduler noise on a busy host is strictly additive, so the minimum
+    is the least-noisy estimator of the kernel's intrinsic cost."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.min(ts))
+
+
+def _np_dtype(dtype: str):
+    import jax.numpy as jnp
+    return {"float32": jnp.float32, "bf16": jnp.bfloat16,
+            "int8": jnp.int8}.get(dtype, jnp.float32)
+
+
+def _pick(timed: list[tuple[dict, float]], *, min_gain: float):
+    """timed[0] is the heuristic default; a challenger must beat it by
+    ``min_gain`` relative to win."""
+    default_cfg, default_t = timed[0]
+    best_cfg, best_t = default_cfg, default_t
+    for cfg, t in timed[1:]:
+        if t < best_t:
+            best_cfg, best_t = cfg, t
+    if best_t >= default_t * (1.0 - min_gain):
+        best_cfg, best_t = default_cfg, default_t
+    return best_cfg, best_t, default_t
+
+
+def _finish(cache: TuningCache | None, key: KernelKey, timed,
+            *, min_gain: float) -> dict:
+    best_cfg, best_t, default_t = _pick(timed, min_gain=min_gain)
+    if cache is not None:
+        cache.put(key, best_cfg, us=best_t * 1e6, default_us=default_t * 1e6,
+                  candidates=len(timed))
+    return best_cfg
+
+
+# ------------------------------------------------------------ fused dense ----
+def tune_fused_dense(rows: int, d_in: int, d_out: int, *,
+                     dtype: str = "float32", backend: str = "xla",
+                     cache: TuningCache | None = None, iters: int = 5,
+                     min_gain: float = MIN_GAIN, seed: int = 0) -> dict:
+    import jax.numpy as jnp
+
+    from repro.kernels import ops
+    rng = np.random.default_rng(seed)
+    dt = _np_dtype(dtype)
+    if dtype == "int8":
+        x = jnp.asarray(rng.integers(-127, 127, size=(rows, d_in)), jnp.int8)
+        w = jnp.asarray(rng.integers(-127, 127, size=(d_in, d_out)), jnp.int8)
+        b = jnp.asarray(rng.normal(size=(d_out,)), jnp.float32)
+        xs = jnp.asarray([[0.02]], jnp.float32)
+        ws = jnp.asarray(rng.uniform(1e-3, 5e-2, size=(d_out,)), jnp.float32)
+
+        def call(cfg):
+            blocks = {k: v for k, v in cfg.items() if k in ("bm", "bn", "bk")}
+            return ops.fused_dense_int8(x, w, b, xs, ws, backend=backend,
+                                        **blocks)
+    else:
+        x = jnp.asarray(rng.normal(size=(rows, d_in)), dt)
+        w = jnp.asarray(rng.normal(size=(d_in, d_out)), dt)
+        b = jnp.asarray(rng.normal(size=(d_out,)), dt)
+
+        def call(cfg):
+            return ops.fused_dense(x, w, b, backend=backend, **cfg)
+
+    if dtype == "int8":   # the int8 kernel has no flattened variant
+        cands = cand.fused_dense_int8_candidates(rows, d_in, d_out)
+    else:
+        cands = cand.fused_dense_candidates(rows, d_in, d_out)
+    if backend in _KNOB_INERT_BACKENDS:
+        cands = cands[:1]
+    timed = [(cfg, _time_call(lambda c=cfg: call(c), iters=iters))
+             for cfg in cands]
+    key = fused_dense_key(rows, d_in, d_out, dtype, backend)
+    return _finish(cache, key, timed, min_gain=min_gain)
+
+
+# ---------------------------------------------------------------- gravnet ----
+def tune_gravnet(n: int, d_s: int, d_f: int, k: int, *,
+                 dtype: str = "float32", backend: str = "xla",
+                 cache: TuningCache | None = None, iters: int = 5,
+                 min_gain: float = MIN_GAIN, seed: int = 0) -> dict:
+    import jax.numpy as jnp
+
+    from repro.kernels import ops
+    rng = np.random.default_rng(seed)
+    dt = _np_dtype(dtype)
+    s = jnp.asarray(rng.normal(size=(n, d_s)), dt)
+    f = jnp.asarray(rng.normal(size=(n, d_f)), dt)
+    mask = jnp.asarray(rng.uniform(size=(n,)) < 0.8, jnp.float32)
+
+    def call(cfg):
+        return ops.gravnet_aggregate(s, f, mask, k=k, backend=backend, **cfg)
+
+    cands = cand.gravnet_candidates(n)
+    if backend in _KNOB_INERT_BACKENDS:
+        cands = cands[:1]
+    timed = [(cfg, _time_call(lambda c=cfg: call(c), iters=iters))
+             for cfg in cands]
+    key = gravnet_key(n, d_s, d_f, k, dtype, backend)
+    return _finish(cache, key, timed, min_gain=min_gain)
+
+
+# -------------------------------------------------------- flash attention ----
+def tune_flash_attention(bh: int, s: int, t: int, d: int, *,
+                         causal: bool = True, dtype: str = "float32",
+                         backend: str = "xla",
+                         cache: TuningCache | None = None, iters: int = 5,
+                         min_gain: float = MIN_GAIN, seed: int = 0) -> dict:
+    import jax.numpy as jnp
+
+    from repro.kernels import ops
+    rng = np.random.default_rng(seed)
+    dt = _np_dtype(dtype)
+    q = jnp.asarray(rng.normal(size=(bh, s, d)), dt)
+    k = jnp.asarray(rng.normal(size=(bh, t, d)), dt)
+    v = jnp.asarray(rng.normal(size=(bh, t, d)), dt)
+
+    def call(cfg):
+        return ops.flash_attention(q, k, v, causal=causal, backend=backend,
+                                   **cfg)
+
+    cands = cand.flash_attention_candidates(s, t)
+    if backend in _KNOB_INERT_BACKENDS:
+        cands = cands[:1]
+    timed = [(cfg, _time_call(lambda c=cfg: call(c), iters=iters))
+             for cfg in cands]
+    key = flash_attention_key(bh, s, t, d, dtype, backend)
+    return _finish(cache, key, timed, min_gain=min_gain)
+
+
+# ------------------------------------------------------------ graph walk ----
+def graph_kernel_problems(g, *, n_rows: int, backend: str) -> list[KernelKey]:
+    """The tuning problems a deploy-optimized graph emits, derived with
+    the same shape rules ``kernel_opt`` uses when binding kernels."""
+    from repro.core.passes.kernel_opt import (fused_dense_dtype,
+                                              fused_dense_shape)
+    problems: list[KernelKey] = []
+    seen: set[KernelKey] = set()
+    for op in g:
+        if op.template == "fused_dense":
+            rows, d_in, d_out = fused_dense_shape(op, n_rows)
+            key = fused_dense_key(rows, d_in, d_out, fused_dense_dtype(op),
+                                  backend)
+        elif op.op_type == "gravnet_aggregate":
+            key = gravnet_key(n_rows, op.attrs["d_s"], op.attrs["d_f"],
+                              op.attrs["k"], "float32", backend)
+        else:
+            continue
+        if key not in seen:
+            seen.add(key)
+            problems.append(key)
+    return problems
+
+
+def autotune_graph(g, *, n_rows: int, backend: str, cache: TuningCache,
+                   iters: int = 5, min_gain: float = MIN_GAIN,
+                   force: bool = False, verbose: bool = False) -> int:
+    """Tune every kernel problem in ``g``; returns how many were
+    (re)searched. Existing cache entries are kept unless ``force``."""
+    tuned = 0
+    for key in graph_kernel_problems(g, n_rows=n_rows, backend=backend):
+        if not force and key in cache:
+            continue
+        if key.kernel == "fused_dense":
+            rows, d_in, d_out = key.shape
+            tune_fused_dense(rows, d_in, d_out, dtype=key.dtype,
+                             backend=backend, cache=cache, iters=iters,
+                             min_gain=min_gain)
+        elif key.kernel == "gravnet":
+            n, d_s, d_f, k = key.shape
+            tune_gravnet(n, d_s, d_f, k, dtype=key.dtype, backend=backend,
+                         cache=cache, iters=iters, min_gain=min_gain)
+        else:
+            continue
+        tuned += 1
+        if verbose:
+            e = cache.entry(key)
+            print(f"[tune] {key.encode()} -> {e.config} "
+                  f"({e.us:.1f}us vs default {e.default_us:.1f}us, "
+                  f"{e.candidates} candidates)")
+    return tuned

@@ -1,0 +1,193 @@
+"""Persistent kernel-tuning cache.
+
+The paper's kernel-level optimization study (looped vs. flattened AIE
+kernels) shows the latency-optimal kernel configuration is
+shape-dependent; LL-GNN (arXiv:2209.14065) makes the same point for
+FPGA GNN layers. This module stores *searched* winners so the design
+flow stops guessing: a JSON file maps a ``KernelKey``
+(kernel, shape, dtype, backend) to the winning launch configuration
+(variant / block shapes) plus its measured time.
+
+Design constraints:
+
+- **Graceful degradation** — a missing, corrupt, or stale (schema
+  mismatch) cache file loads as an *empty* cache; every consumer falls
+  back to the current heuristic defaults, so tuning is always an
+  overlay, never a dependency.
+- **Determinism** — ``save()`` writes sorted keys with a fixed layout,
+  so cache files round-trip byte-for-byte and diff cleanly in review.
+- **Memoized lookups** — entries decode once; the serving hot path
+  (warm-up, kernel binding) never re-parses JSON.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import tempfile
+
+SCHEMA_VERSION = 1
+
+_KEY_SEP = "|"
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelKey:
+    """Identity of one tuning problem.
+
+    ``shape`` is the kernel's *logical* problem shape (the one the
+    deploy pipeline emits), not the padded launch shape — both the
+    autotuner and ``kernel_opt`` derive it the same way so keys agree.
+    """
+    kernel: str               # 'fused_dense' | 'gravnet' | 'flash_attention'
+    shape: tuple[int, ...]
+    dtype: str                # 'float32' | 'bf16' | 'int8' | ...
+    backend: str              # 'xla' | 'pallas' | 'pallas_interpret'
+
+    def encode(self) -> str:
+        dims = "x".join(str(d) for d in self.shape)
+        return _KEY_SEP.join((self.kernel, dims, self.dtype, self.backend))
+
+    @classmethod
+    def decode(cls, s: str) -> "KernelKey":
+        kernel, dims, dtype, backend = s.split(_KEY_SEP)
+        shape = tuple(int(d) for d in dims.split("x")) if dims else ()
+        return cls(kernel, shape, dtype, backend)
+
+
+def fused_dense_key(rows: int, d_in: int, d_out: int, dtype: str,
+                    backend: str) -> KernelKey:
+    return KernelKey("fused_dense", (rows, d_in, d_out), dtype, backend)
+
+
+def gravnet_key(n: int, d_s: int, d_f: int, k: int, dtype: str,
+                backend: str) -> KernelKey:
+    return KernelKey("gravnet", (n, d_s, d_f, k), dtype, backend)
+
+
+def flash_attention_key(bh: int, s: int, t: int, d: int, dtype: str,
+                        backend: str) -> KernelKey:
+    return KernelKey("flash_attention", (bh, s, t, d), dtype, backend)
+
+
+@dataclasses.dataclass
+class TuningEntry:
+    """One cached winner: the launch config plus search provenance."""
+    config: dict
+    us: float | None = None          # measured microseconds of the winner
+    default_us: float | None = None  # the heuristic default's time
+    candidates: int = 0              # how many configs were searched
+
+    def to_json(self) -> dict:
+        return {"config": dict(self.config), "us": self.us,
+                "default_us": self.default_us,
+                "candidates": self.candidates}
+
+    @classmethod
+    def from_json(cls, d: dict) -> "TuningEntry":
+        return cls(config=dict(d["config"]), us=d.get("us"),
+                   default_us=d.get("default_us"),
+                   candidates=int(d.get("candidates", 0)))
+
+
+class TuningCache:
+    """In-memory view of the JSON tuning cache.
+
+    ``lookup`` returns the winning config dict for a key, or ``None``
+    (cache miss → caller keeps its heuristic default). ``put`` +
+    ``save`` persist new winners.
+    """
+
+    def __init__(self, path: str | os.PathLike | None = None):
+        self.path = None if path is None else os.fspath(path)
+        self._entries: dict[KernelKey, TuningEntry] = {}
+        self.load_error: str | None = None   # why the file was ignored
+
+    # ------------------------------------------------------------- I/O ----
+    @classmethod
+    def load(cls, path: str | os.PathLike) -> "TuningCache":
+        """Load a cache file; any problem yields an *empty* cache whose
+        ``load_error`` says why (missing file is not an error)."""
+        cache = cls(path)
+        p = os.fspath(path)
+        if not os.path.exists(p):
+            return cache
+        try:
+            with open(p) as f:
+                raw = json.load(f)
+        except (OSError, json.JSONDecodeError, UnicodeDecodeError) as e:
+            cache.load_error = f"unreadable tuning cache {p}: {e}"
+            return cache
+        if not isinstance(raw, dict):
+            cache.load_error = f"tuning cache {p} is not a JSON object"
+            return cache
+        if raw.get("schema") != SCHEMA_VERSION:
+            cache.load_error = (
+                f"tuning cache {p} has schema {raw.get('schema')!r}, "
+                f"expected {SCHEMA_VERSION} (stale — ignored)")
+            return cache
+        entries = raw.get("entries", {})
+        if not isinstance(entries, dict):
+            cache.load_error = f"tuning cache {p}: 'entries' is not a dict"
+            return cache
+        for enc, body in entries.items():
+            try:
+                key = KernelKey.decode(enc)
+                entry = TuningEntry.from_json(body)
+            except (ValueError, KeyError, TypeError, AttributeError):
+                # one malformed entry does not poison the rest
+                continue
+            cache._entries[key] = entry
+        return cache
+
+    def save(self, path: str | os.PathLike | None = None) -> str:
+        p = os.fspath(path) if path is not None else self.path
+        if p is None:
+            raise ValueError("TuningCache.save: no path given")
+        payload = {
+            "schema": SCHEMA_VERSION,
+            "entries": {k.encode(): e.to_json()
+                        for k, e in sorted(self._entries.items(),
+                                           key=lambda kv: kv[0].encode())},
+        }
+        # atomic replace: a crashed writer never leaves a torn file for
+        # the graceful-degradation path to reject
+        d = os.path.dirname(os.path.abspath(p)) or "."
+        fd, tmp = tempfile.mkstemp(dir=d, prefix=".tuning_cache_")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(payload, f, indent=1, sort_keys=True)
+                f.write("\n")
+            os.replace(tmp, p)
+        except BaseException:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+            raise
+        self.path = p
+        return p
+
+    # ----------------------------------------------------------- access ----
+    def lookup(self, key: KernelKey) -> dict | None:
+        e = self._entries.get(key)
+        return None if e is None else e.config
+
+    def entry(self, key: KernelKey) -> TuningEntry | None:
+        return self._entries.get(key)
+
+    def put(self, key: KernelKey, config: dict, *, us: float | None = None,
+            default_us: float | None = None, candidates: int = 0) -> None:
+        self._entries[key] = TuningEntry(config=dict(config), us=us,
+                                         default_us=default_us,
+                                         candidates=candidates)
+
+    def entries(self) -> dict[KernelKey, TuningEntry]:
+        return dict(self._entries)
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, key: KernelKey) -> bool:
+        return key in self._entries
+
+    def __bool__(self) -> bool:   # empty caches are still real caches
+        return True

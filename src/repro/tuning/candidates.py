@@ -1,0 +1,112 @@
+"""Candidate launch configurations for the tunable Pallas kernels.
+
+The search spaces mirror the knobs the kernels actually expose:
+
+- ``fused_dense``: the looped/flattened variant split (the paper's
+  loop-pipelined vs ``chess_flatten_loop`` study) and the looped
+  variant's ``(bm, bn, bk)`` block shapes;
+- ``gravnet``: the row-tile ``bm`` (how many query rows per grid step
+  share the VMEM-resident coordinate/feature operands);
+- ``flash_attention``: the ``(bq, bk)`` q/kv block shapes.
+
+Every candidate list starts with the **heuristic default** the code
+would pick without tuning; the autotuner only switches away from it on
+a measured, above-noise win, so an unlucky timing run can never make
+things worse than today's behavior.
+
+Block candidates are powers of two: the kernels' wrappers pad operands
+to block multiples, TPU lanes are 128 wide, and sublane tiles are 8
+deep — powers of two keep every candidate launchable on both the
+interpret and Mosaic paths.
+"""
+from __future__ import annotations
+
+from repro.core.passes import kernel_opt as _ko
+
+
+def _pow2_range(lo: int, hi: int) -> list[int]:
+    out = []
+    v = lo
+    while v <= hi:
+        out.append(v)
+        v *= 2
+    return out
+
+
+def _dedup_keep_order(cands: list[dict]) -> list[dict]:
+    seen, out = set(), []
+    for c in cands:
+        sig = tuple(sorted(c.items()))
+        if sig not in seen:
+            seen.add(sig)
+            out.append(c)
+    return out
+
+
+def default_fused_dense(rows: int, d_in: int, d_out: int) -> dict:
+    """The untuned heuristic from ``kernel_opt`` (kept in one place so
+    the bit-for-bit fallback and the search baseline cannot drift)."""
+    if rows <= _ko.FLATTEN_ROWS and max(d_in, d_out) <= _ko.FLATTEN_DIM:
+        return {"variant": "flattened"}
+    return {"variant": "looped",
+            "bm": _ko._pick_block(rows, 512),
+            "bn": _ko._pick_block(d_out, 512),
+            "bk": _ko._pick_block(d_in, 2048)}
+
+
+def fused_dense_candidates(rows: int, d_in: int, d_out: int,
+                           *, max_candidates: int = 16) -> list[dict]:
+    cands = [default_fused_dense(rows, d_in, d_out)]
+    # the flattened variant is only launchable when the whole operand
+    # set fits VMEM comfortably; use the kernel_opt envelope ×2 so the
+    # search can discover wins just past the heuristic cliff
+    if rows <= 2 * _ko.FLATTEN_ROWS and max(d_in, d_out) <= _ko.FLATTEN_DIM:
+        cands.append({"variant": "flattened"})
+    bm_opts = [b for b in _pow2_range(8, 512) if b <= max(rows, 8)]
+    bn_opts = [b for b in _pow2_range(128, 512) if b <= max(d_out, 128)]
+    bk_opts = [b for b in _pow2_range(128, 2048) if b <= max(d_in, 128)]
+    for bm in reversed(bm_opts[-3:]):        # largest row tiles first
+        for bn in reversed(bn_opts[-2:]):
+            for bk in reversed(bk_opts[-2:]):
+                cands.append({"variant": "looped",
+                              "bm": bm, "bn": bn, "bk": bk})
+    return _dedup_keep_order(cands)[:max_candidates]
+
+
+def default_fused_dense_int8(rows: int, d_in: int, d_out: int) -> dict:
+    """The int8 executor path has no flattened variant; untuned it runs
+    the looped kernel at the wrapper's default blocks."""
+    return {"variant": "looped", "bm": 128, "bn": 128, "bk": 512}
+
+
+def fused_dense_int8_candidates(rows: int, d_in: int, d_out: int,
+                                *, max_candidates: int = 16) -> list[dict]:
+    cands = [default_fused_dense_int8(rows, d_in, d_out)]
+    cands += [c for c in fused_dense_candidates(rows, d_in, d_out)
+              if c.get("variant") == "looped"]
+    return _dedup_keep_order(cands)[:max_candidates]
+
+
+def default_gravnet(n: int) -> dict:
+    return {"bm": min(n, 128)}
+
+
+def gravnet_candidates(n: int, *, max_candidates: int = 8) -> list[dict]:
+    cands = [default_gravnet(n)]
+    for bm in _pow2_range(8, 512):
+        if n % bm == 0:        # the kernel asserts n % bm == 0
+            cands.append({"bm": bm})
+    return _dedup_keep_order(cands)[:max_candidates]
+
+
+def default_flash_attention() -> dict:
+    return {"bq": 128, "bk": 128}
+
+
+def flash_attention_candidates(s: int, t: int,
+                               *, max_candidates: int = 8) -> list[dict]:
+    cands = [default_flash_attention()]
+    for bq in _pow2_range(64, 256):
+        for bk in _pow2_range(64, 256):
+            cands.append({"bq": min(bq, s), "bk": min(bk, t)})
+    return _dedup_keep_order(cands)[:max_candidates]

@@ -1,0 +1,92 @@
+"""Serving warm-up from the tuning cache.
+
+A replica's first request otherwise pays jit tracing + compilation for
+every kernel shape it serves — at trigger latency budgets (µs) that is
+catastrophic. The tuning cache already knows exactly which
+(kernel, shape, dtype, backend) problems the deployment emits, so
+``warm_from_cache`` replays each cached winner once with synthetic
+operands before the replica accepts traffic, populating the jit cache.
+
+Warm-up is strictly best-effort: a cache entry that no longer matches
+the installed kernels (renamed knob, impossible shape) is skipped, and
+the replica starts regardless — the cache can make startup faster,
+never break it.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.tuning.cache import TuningCache
+
+
+def _replay(key, config) -> None:
+    import jax.numpy as jnp
+
+    from repro.kernels import ops
+    rng = np.random.default_rng(0)
+    backend = key.backend
+    if key.kernel == "fused_dense":
+        rows, d_in, d_out = key.shape
+        if key.dtype == "int8":
+            x = jnp.asarray(rng.integers(-127, 127, size=(rows, d_in)),
+                            jnp.int8)
+            w = jnp.asarray(rng.integers(-127, 127, size=(d_in, d_out)),
+                            jnp.int8)
+            b = jnp.asarray(rng.normal(size=(d_out,)), jnp.float32)
+            xs = jnp.asarray([[0.02]], jnp.float32)
+            ws = jnp.asarray(rng.uniform(1e-3, 5e-2, size=(d_out,)),
+                             jnp.float32)
+            blocks = {k: v for k, v in config.items()
+                      if k in ("bm", "bn", "bk")}
+            out = ops.fused_dense_int8(x, w, b, xs, ws, backend=backend,
+                                       **blocks)
+        else:
+            dt = jnp.bfloat16 if key.dtype == "bf16" else jnp.float32
+            x = jnp.asarray(rng.normal(size=(rows, d_in)), dt)
+            w = jnp.asarray(rng.normal(size=(d_in, d_out)), dt)
+            b = jnp.asarray(rng.normal(size=(d_out,)), dt)
+            out = ops.fused_dense(x, w, b, backend=backend, **config)
+    elif key.kernel == "gravnet":
+        n, d_s, d_f, k = key.shape
+        s = jnp.asarray(rng.normal(size=(n, d_s)), jnp.float32)
+        f = jnp.asarray(rng.normal(size=(n, d_f)), jnp.float32)
+        mask = jnp.ones((n,), jnp.float32)
+        out = ops.gravnet_aggregate(s, f, mask, k=k, backend=backend,
+                                    **config)
+    elif key.kernel == "flash_attention":
+        bh, s, t, d = key.shape
+        q = jnp.asarray(rng.normal(size=(bh, s, d)), jnp.float32)
+        kk = jnp.asarray(rng.normal(size=(bh, t, d)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(bh, t, d)), jnp.float32)
+        out = ops.flash_attention(q, kk, v, backend=backend, **config)
+    else:
+        return
+    import jax
+    jax.block_until_ready(out)
+
+
+def warm_from_cache(cache: TuningCache, *, backend: str | None = None,
+                    kernels: tuple[str, ...] | None = None) -> int:
+    """Replay every cached winner (optionally filtered by backend /
+    kernel family) once; returns how many entries were warmed."""
+    warmed = 0
+    for key, entry in sorted(cache.entries().items(),
+                             key=lambda kv: kv[0].encode()):
+        if backend is not None and key.backend != backend:
+            continue
+        if kernels is not None and key.kernel not in kernels:
+            continue
+        try:
+            _replay(key, entry.config)
+        except Exception:   # noqa: BLE001 — stale entry must not block start
+            continue
+        warmed += 1
+    return warmed
+
+
+def make_warmup(cache: TuningCache, *, backend: str | None = None,
+                kernels: tuple[str, ...] | None = None):
+    """A no-arg callable for ``ReplicaEngine(warmup_fn=...)``."""
+    def _warm():
+        return warm_from_cache(cache, backend=backend, kernels=kernels)
+    return _warm
