@@ -1,0 +1,241 @@
+"""Monitoring-overhead benchmark: monitored vs unmonitored serving.
+
+Streaming-dataflow trigger systems only get to keep their monitoring
+if it rides the hot path with bounded overhead (DGNNFlow-style online
+rate/efficiency counters).  This benchmark quantifies what
+``ShardedTriggerService(monitor=...)`` costs, two ways:
+
+1. **A/B throughput** (reported): interleaved unmonitored/monitored
+   service passes over the same synthetic CPS-shaped events, with
+   truth bits submitted, a live ``MonitorServer`` polling
+   ``/snapshot``, and a full fold forced at the end.  On small shared
+   CI machines the thread-based serving stack is strongly bimodal
+   (per-pass throughput swings ±40% with identical code — batch
+   formation depends on which thread wins the cores), so the A/B
+   medians are informative, not gateable at the 5% level.
+
+2. **Per-event monitoring cost** (gated): a deterministic
+   single-threaded measurement of everything monitoring adds per
+   event — the submit-side truth staging, the per-batch truth pops +
+   ``record_raw`` staging, and the reader-side fold + periodic
+   snapshot aggregation.  Charging *all* of it against the unmonitored
+   baseline is an upper bound: in the live service the fold runs on
+   the monitoring reader's thread and overlaps serving idle time.
+   ``overhead_frac = cost_per_event * unmonitored_rate`` is what
+   ``--check`` enforces (default bound 5%).
+
+Usage:
+    PYTHONPATH=src python benchmarks/monitoring_overhead.py \
+        --out BENCH_monitoring.json --check
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import threading
+import time
+import urllib.request
+
+import numpy as np
+
+from repro.serving import MonitorServer, ShardedTriggerService, TriggerMonitor
+
+
+def make_infer(service_us: float, k_max: int = 8):
+    """Synthetic lane emitting CPS-shaped batches, so the monitored
+    arm pays the full recording path (trigger bit, cluster stats,
+    display ring) per event.  ``service_us`` > 0 adds a sleep modelling
+    accelerator occupancy per batch."""
+
+    def infer(feeds):
+        if service_us > 0:
+            time.sleep(service_us * 1e-6)
+        x = feeds["hits"]
+        b = x.shape[0]
+        e = x.sum(axis=tuple(range(1, x.ndim)))
+        n = np.minimum(np.maximum(e, 0.0) * 2.0, k_max).astype(np.int32)
+        valid = np.arange(k_max)[None, :] < n[:, None]
+        return {"cps": {
+            "trigger": e > 0.5,
+            "n_clusters": n,
+            "cluster_valid": valid,
+            "cluster_e": np.abs(x[:, :k_max, 0]),
+            "cluster_beta": np.clip(np.abs(x[:, :k_max, 1]), 0, 1),
+            "cluster_xy": np.clip(x[:, :k_max, 2:4], -0.5, 0.5),
+        }}
+
+    return infer
+
+
+# --------------------------------------------------- deterministic cost ----
+def hotpath_cost_us(*, microbatch: int, n_batches: int = 512,
+                    snapshot_every: int = 32) -> dict:
+    """Per-event monitoring cost, measured single-threaded.
+
+    Times exactly what ``monitor=`` *adds* to a service: the
+    submit-side truth staging, the replica batch-side truth pops +
+    ``record_raw``, and the reader-side fold/aggregate via
+    ``snapshot()`` every ``snapshot_every`` batches (a 20 Hz dashboard
+    at paper-scale rates polls far less often per event than that).
+    The batch item tuples are pre-built — the unmonitored replica loop
+    constructs those regardless."""
+    infer = make_infer(0.0)
+    rng = np.random.default_rng(3)
+    feeds = {"hits": rng.normal(size=(microbatch, 32, 4))
+             .astype(np.float32)}
+    cps = infer(feeds)["cps"]
+    mon = TriggerMonitor(window=4096, display_n=64)
+    truth_map: dict[int, bool] = {}
+    ts = time.perf_counter()
+    batches = [[(b * microbatch + j, ts, ts, None, None)
+                for j in range(microbatch)] for b in range(n_batches)]
+    t0 = time.perf_counter()
+    for b, items in enumerate(batches):
+        for it in items:                  # submit-side extra
+            truth_map[it[0]] = True
+        # replica batch-side extras
+        truths = [truth_map.pop(it[0], None) for it in items]
+        rec = {k: np.asarray(v) for k, v in cps.items()}
+        mon.record_raw(rec, [(it[0], it[1]) for it in items],
+                       time.perf_counter(), truths)
+        if b % snapshot_every == 0:       # reader-side fold + aggregate
+            mon.snapshot()
+    snap = mon.snapshot()
+    dt = time.perf_counter() - t0
+    n_ev = n_batches * microbatch
+    assert snap["events"] == n_ev
+    return {"cost_us_per_event": dt / n_ev * 1e6,
+            "cost_events": n_ev, "snapshot_every": snapshot_every}
+
+
+# ------------------------------------------------------- A/B throughput ----
+def run_pass(infer, events, truth, *, replicas, microbatch, monitored,
+             poll_hz: float = 10.0):
+    n = len(truth)
+    svc = ShardedTriggerService(
+        infer, n_replicas=replicas, microbatch=microbatch,
+        window_s=5e-3, queue_depth=n + microbatch, inflight=1,
+        devices=None, monitor={"display_n": 64} if monitored else False)
+    server = poller = None
+    stop = threading.Event()
+    if monitored:
+        server = MonitorServer.for_service(svc, port=0)
+
+        def poll():
+            while not stop.is_set():
+                try:
+                    urllib.request.urlopen(
+                        f"{server.url}/snapshot", timeout=5).read()
+                except OSError:
+                    pass
+                stop.wait(1.0 / poll_hz)
+
+        poller = threading.Thread(target=poll, daemon=True)
+        poller.start()
+    t0 = time.perf_counter()
+    futs = [svc.submit(events[i], truth=truth[i] if monitored
+                       else None) for i in range(n)]
+    for f in futs:
+        f.result(timeout=300)
+    dt = time.perf_counter() - t0
+    svc.drain()
+    if monitored:
+        snap = svc.monitor_snapshot()    # force the full fold
+        assert snap["events"] == n, "monitor lost events"
+        stop.set()
+        poller.join(timeout=5)
+        server.close()
+    svc.close()
+    return n / dt
+
+
+def measure(args):
+    infer = make_infer(args.service_us)
+    rng = np.random.default_rng(11)
+    events = [{"hits": rng.normal(size=(args.n_hits, 4))
+               .astype(np.float32)} for _ in range(args.events)]
+    # plain-bool truth bits: preparing truth is the caller's business,
+    # not monitoring overhead, so keep np->bool casts out of the loop
+    truth = [bool(x) for x in rng.uniform(size=args.events) > 0.5]
+    kw = dict(replicas=args.replicas, microbatch=args.microbatch)
+    # untimed warmup of both arms: the first pass pays thread-pool and
+    # numpy warmup that would otherwise skew whichever arm runs first
+    run_pass(infer, events[:256], truth[:256], monitored=False, **kw)
+    run_pass(infer, events[:256], truth[:256], monitored=True, **kw)
+    un, mon = [], []
+    for t in range(args.trials):
+        u = run_pass(infer, events, truth, monitored=False, **kw)
+        m = run_pass(infer, events, truth, monitored=True, **kw)
+        un.append(u)
+        mon.append(m)
+        print(f"[monitoring] pair {t}: unmonitored {u:,.0f} ev/s | "
+              f"monitored {m:,.0f} ev/s | ratio {m / u:.3f}")
+    # median of three cost runs: the loop is ~25 ms, so a transient
+    # frequency/throttle spike must not set the gated number
+    cost = sorted((hotpath_cost_us(microbatch=args.microbatch)
+                   for _ in range(3)),
+                  key=lambda c: c["cost_us_per_event"])[1]
+    u_med = float(np.median(un))
+    overhead = cost["cost_us_per_event"] * 1e-6 * u_med
+    return {
+        "events": args.events, "trials": args.trials,
+        "replicas": args.replicas, "microbatch": args.microbatch,
+        "service_us": args.service_us,
+        "unmonitored_ev_s": u_med,
+        "monitored_ev_s": float(np.median(mon)),
+        "unmonitored_trials_ev_s": un, "monitored_trials_ev_s": mon,
+        "ab_ratio_median": float(np.median(
+            [m / u for u, m in zip(un, mon)])),
+        "monitor_cost_us_per_event": cost["cost_us_per_event"],
+        # the gated number: deterministic per-event monitoring cost as
+        # a fraction of the unmonitored per-event budget
+        "overhead_frac": overhead,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--events", type=int, default=4096)
+    ap.add_argument("--trials", type=int, default=3,
+                    help="interleaved unmonitored/monitored A/B pairs")
+    ap.add_argument("--replicas", type=int, default=1)
+    ap.add_argument("--microbatch", type=int, default=32)
+    ap.add_argument("--n-hits", type=int, default=32)
+    ap.add_argument("--service-us", type=float, default=0.0,
+                    help="synthetic accelerator occupancy per batch "
+                         "(0 = pure serving CPU, the most adversarial "
+                         "case for monitoring overhead)")
+    ap.add_argument("--max-overhead", type=float, default=0.05,
+                    help="--check bound on the deterministic "
+                         "per-event-cost overhead fraction")
+    ap.add_argument("--out", default=None, metavar="PATH")
+    ap.add_argument("--check", action="store_true")
+    args = ap.parse_args()
+
+    res = measure(args)
+    if args.check and res["overhead_frac"] > args.max_overhead:
+        # one re-measure: a noisy run must not fail CI by itself
+        print(f"[monitoring] overhead {res['overhead_frac']:.1%} > "
+              f"{args.max_overhead:.0%}; re-measuring once")
+        res = measure(args)
+    print(f"[monitoring] A/B median: unmonitored "
+          f"{res['unmonitored_ev_s']:,.0f} ev/s | monitored "
+          f"{res['monitored_ev_s']:,.0f} ev/s "
+          f"(ratio {res['ab_ratio_median']:.3f})")
+    print(f"[monitoring] hot-path cost "
+          f"{res['monitor_cost_us_per_event']:.2f} us/event -> "
+          f"overhead {res['overhead_frac']:.2%} of the unmonitored "
+          f"budget (bound {args.max_overhead:.0%})")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(res, f, indent=1)
+        print(f"[monitoring] -> {args.out}")
+    if args.check and res["overhead_frac"] > args.max_overhead:
+        print("[monitoring] FAIL: monitoring overhead exceeds bound")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

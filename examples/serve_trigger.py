@@ -1,7 +1,9 @@
 """Real-time trigger serving demo (the paper's end-to-end demonstrator):
 deployment flow -> compiled pipeline -> sharded streaming service with
 strict in-order completion across replicas, micro-batching deadline,
-and an event-display JSON (the interactive-visualization analogue).
+the live monitoring endpoint (/snapshot JSON, /events NDJSON, an
+HTML/SVG event display on an ephemeral port), and an event-display
+JSON written through the shared ``event_display`` helper.
 
     PYTHONPATH=src python examples/serve_trigger.py
     PYTHONPATH=src python examples/serve_trigger.py --replicas 4
@@ -16,7 +18,7 @@ from repro.launch import serve
 def main():
     sys.argv = [sys.argv[0], "--detector", "current", "--design-point",
                 "3", "--events", "256", "--train-steps", "200",
-                "--replicas", "2",
+                "--replicas", "2", "--monitor-port", "0",
                 "--event-display", "/tmp/event_display.json"] \
         + sys.argv[1:]
     serve.main()

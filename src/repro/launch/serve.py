@@ -2,17 +2,20 @@
 
 Runs the paper's demonstrator end to end on CPU: deploy CaloClusterNet
 through the design flow at the chosen design point, wrap the compiled
-pipeline in the real-time TriggerServingEngine (micro-batching window,
-strict in-order completion, hedged dispatch), stream synthetic Belle II
-events through it, and report throughput/latency percentiles + a
-monitoring snapshot (the visualization-pipeline analogue: a JSON event
-display of clusters per event).
+pipeline in the real-time sharded trigger service (micro-batching
+window, strict in-order completion, hedged dispatch), stream synthetic
+Belle II events through it, and report throughput/latency percentiles
+plus the real-time monitoring pipeline (paper §III-B): an online
+``MonitorSnapshot`` with truth-matched efficiency/fake-rate, an
+optional live HTTP endpoint (``--monitor-port``), and a JSON event
+display written through the shared ``event_display`` helper.
 """
 from __future__ import annotations
 
 import argparse
 import json
 import time
+import urllib.request
 
 import jax
 import numpy as np
@@ -21,7 +24,8 @@ from repro.core import caloclusternet as ccn
 from repro.core.passes.parallelize import Requirements
 from repro.core.pipeline import deploy
 from repro.data.belle2 import Belle2Config, current_detector, generate
-from repro.serving import ShardedTriggerService
+from repro.serving import (MonitorServer, ShardedTriggerService,
+                           event_display, write_display)
 
 
 def main():
@@ -37,9 +41,18 @@ def main():
                     help="events/s target for the P-search (CPU scale)")
     ap.add_argument("--tpu-native-gravnet", action="store_true")
     ap.add_argument("--train-steps", type=int, default=40)
-    ap.add_argument("--event-display", default=None,
-                    help="write a JSON event display for the first N "
-                         "events (monitoring pipeline analogue)")
+    ap.add_argument("--event-display", default=None, metavar="PATH",
+                    help="write a JSON event display (shared "
+                         "event_display() records, detector-correct "
+                         "grid) for the first --event-display-n events")
+    ap.add_argument("--event-display-n", type=int, default=16,
+                    metavar="N", help="events in the --event-display "
+                                      "file (default 16)")
+    ap.add_argument("--monitor-port", type=int, default=None,
+                    metavar="PORT",
+                    help="serve the live monitor over HTTP on this "
+                         "port (0 = ephemeral): /snapshot JSON, "
+                         "/events NDJSON tail, / HTML/SVG display")
     ap.add_argument("--replicas", type=int, default=1,
                     help="serving replicas (thread-backed on one "
                          "device, device-placed when several exist)")
@@ -134,32 +147,41 @@ def main():
             "mask": calib["mask"][:pipe.microbatch]}
     infer(warm)
 
-    events = generate(gen_cfg, args.events, seed=7)
-    # create the service after event generation: its stats clocks back
-    # the reported per-replica throughput
     warmup_fn = None
     if cache is not None and len(cache):
         from repro.tuning import make_warmup
         warmup_fn = make_warmup(cache, backend=pipe.backend)
-    eng = ShardedTriggerService(infer, n_replicas=args.replicas,
-                                microbatch=max(pipe.microbatch, 16),
-                                window_s=2e-3, hedge_after_s=None,
-                                policy=args.policy, warmup_fn=warmup_fn)
+    monitoring = args.monitor_port is not None or args.event_display
+    eng = ShardedTriggerService(
+        infer, n_replicas=args.replicas,
+        microbatch=max(pipe.microbatch, 16), window_s=2e-3,
+        hedge_after_s=None, policy=args.policy, warmup_fn=warmup_fn,
+        monitor={"detector": gen_cfg,
+                 "display_n": max(args.event_display_n, 64)}
+        if monitoring else False)
     if warmup_fn is not None:
         print(f"[serve] replicas warmed "
               f"{sum(r.warmed for r in eng.replicas)} cached kernel "
               f"shape(s) at startup")
+    server = None
+    if args.monitor_port is not None:
+        server = MonitorServer.for_service(eng, port=args.monitor_port)
+        print(f"[serve] monitor live at {server.url} "
+              f"(/snapshot, /events, / = event display)")
+    events = generate(gen_cfg, args.events, seed=7)
+    truth = events["trigger_truth"] > 0
     t0 = time.perf_counter()
     futs = []
     for i in range(args.events):
         futs.append(eng.submit({"hits": events["feats"][i],
-                                "mask": events["mask"][i]}))
+                                "mask": events["mask"][i]},
+                               truth=bool(truth[i]) if monitoring
+                               else None))
     results = [f.result(timeout=120) for f in futs]
     dt = time.perf_counter() - t0
     eng.drain()
     s = eng.stats.summary()
     trig = np.asarray([bool(r["cps"]["trigger"]) for r in results])
-    truth = events["trigger_truth"] > 0
     eff = float((trig & truth).sum() / max(truth.sum(), 1))
     fake = float((trig & ~truth).sum() / max((~truth).sum(), 1))
     print(f"[serve] {args.events} events in {dt:.2f}s -> "
@@ -177,23 +199,37 @@ def main():
               f"{rs['throughput_ev_s']:,.0f} ev/s")
     print(f"[serve] trigger efficiency={eff:.3f} fake rate={fake:.3f} "
           f"in-order=True")
+    if monitoring:
+        snap = eng.monitor_snapshot()
+
+        def f3(x):      # snapshot stats are None when undefined (e.g.
+            return "n/a" if x is None else f"{x:.3f}"   # one-class truth)
+
+        print(f"[serve] monitor: {snap['events']} events, "
+              f"trigger_rate={f3(snap['trigger_rate'])}, "
+              f"efficiency={f3(snap['efficiency'])}, "
+              f"fake_rate={f3(snap['fake_rate'])}, "
+              f"rate={snap['rate_ev_s']:,.0f} ev/s (windowed)")
+    if server is not None:
+        # prove the live endpoint agrees with the engine's own stats
+        live = json.load(urllib.request.urlopen(
+            f"{server.url}/snapshot", timeout=10))
+        ok = live["events"] == s["completed"]
+        print(f"[serve] /snapshot events={live['events']} vs "
+              f"stats completed={s['completed']} -> "
+              f"{'MATCH' if ok else 'MISMATCH'}")
+        if not ok:
+            raise SystemExit("monitor snapshot disagrees with "
+                             "serving stats")
     if args.event_display:
-        disp = []
-        for i, r in enumerate(results[:16]):
-            disp.append({
-                "event": i,
-                "clusters": [
-                    {"xy": r["cps"]["cluster_xy"][k].tolist(),
-                     "energy": float(r["cps"]["cluster_e"][k]),
-                     "beta": float(r["cps"]["cluster_beta"][k])}
-                    for k in range(len(r["cps"]["cluster_valid"]))
-                    if bool(r["cps"]["cluster_valid"][k])],
-                "trigger": bool(r["cps"]["trigger"]),
-                "truth": bool(truth[i]),
-            })
-        with open(args.event_display, "w") as f:
-            json.dump(disp, f, indent=1)
-        print(f"[serve] event display -> {args.event_display}")
+        disp = [event_display(r["cps"], event_id=i, detector=gen_cfg,
+                              truth=bool(truth[i]))
+                for i, r in enumerate(results[:args.event_display_n])]
+        write_display(args.event_display, disp)
+        print(f"[serve] event display ({len(disp)} events) -> "
+              f"{args.event_display}")
+    if server is not None:
+        server.close()
     eng.close()
 
 

@@ -1,9 +1,15 @@
 from repro.serving.engine import (AggregateStats, ServingStats,
                                   ShardedTriggerService,
                                   TriggerServingEngine)
+from repro.serving.monitor import (MonitorSnapshot, TriggerMonitor,
+                                   detector_grid, event_display,
+                                   write_display)
+from repro.serving.monitor_server import MonitorServer
 from repro.serving.replica import InOrderReleaser, ReplicaEngine
 from repro.serving.router import POLICIES, Router
 
-__all__ = ["AggregateStats", "InOrderReleaser", "POLICIES",
-           "ReplicaEngine", "Router", "ServingStats",
-           "ShardedTriggerService", "TriggerServingEngine"]
+__all__ = ["AggregateStats", "InOrderReleaser", "MonitorServer",
+           "MonitorSnapshot", "POLICIES", "ReplicaEngine", "Router",
+           "ServingStats", "ShardedTriggerService", "TriggerMonitor",
+           "TriggerServingEngine", "detector_grid", "event_display",
+           "write_display"]

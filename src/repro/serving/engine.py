@@ -33,6 +33,7 @@ from concurrent.futures import Future
 
 import numpy as np
 
+from repro.serving.monitor import MonitorSnapshot, TriggerMonitor
 from repro.serving.replica import (EventTiming, InOrderReleaser,
                                    ReplicaEngine, ServingStats)
 from repro.serving.router import POLICIES, Router
@@ -42,11 +43,21 @@ __all__ = ["AggregateStats", "ServingStats", "ShardedTriggerService",
 
 
 class AggregateStats:
-    """Merged view over the per-replica ``ServingStats``."""
+    """Merged view over the per-replica ``ServingStats``.
+
+    The throughput clock starts at the *first submission*, not at
+    construction — a service built early (e.g. before event generation)
+    must not report a diluted rate."""
 
     def __init__(self, replicas):
         self._replicas = replicas
-        self.started_at = time.perf_counter()
+        self.first_submit_at: float | None = None
+
+    def note_submission(self, t: float):
+        """Called (under the service's sequence lock) on every submit;
+        only the first one starts the clock."""
+        if self.first_submit_at is None:
+            self.first_submit_at = t
 
     # aggregate counters mirror the ServingStats field names so callers
     # can treat the two uniformly.
@@ -81,7 +92,9 @@ class AggregateStats:
         return float(np.percentile(lat, p)) if lat else float("nan")
 
     def throughput_ev_s(self):
-        dt = time.perf_counter() - self.started_at
+        if self.first_submit_at is None:
+            return 0.0
+        dt = time.perf_counter() - self.first_submit_at
         return self.completed / dt if dt > 0 else 0.0
 
     def summary(self):
@@ -139,13 +152,24 @@ class ShardedTriggerService:
     thread-backed replicas sharing one device would re-execute an
     already-hot cache N times for nothing). Best-effort: failures are
     swallowed and the replicas start anyway.
+
+    ``monitor``: opt-in real-time monitoring (paper §III-B's
+    visualization pipeline). ``True`` attaches one ``TriggerMonitor``
+    per replica, fed one O(1) ``record_batch`` per completed
+    micro-batch on the result-release path of its batch loop — the hot
+    loop never blocks on aggregation, which runs vectorized on the
+    reader's thread; a dict is forwarded to each ``TriggerMonitor``
+    (e.g. ``{"window": 8192, "detector": cfg}``).
+    Read the fleet view with ``monitor_snapshot()`` /
+    ``event_displays()``, and pass ``truth=`` to ``submit`` to get
+    online truth-matched efficiency / fake-rate in the snapshot.
     """
 
     def __init__(self, infer_fn, *, n_replicas: int = 1, microbatch: int,
                  window_s: float = 1e-3, queue_depth: int = 1024,
                  hedge_after_s: float | None = None,
                  policy: str = "round_robin", devices="auto",
-                 inflight: int = 2, warmup_fn=None):
+                 inflight: int = 2, warmup_fn=None, monitor=False):
         if n_replicas < 1:
             raise ValueError("n_replicas must be >= 1")
         infer_fns = infer_fn if isinstance(infer_fn, (list, tuple)) \
@@ -168,6 +192,15 @@ class ShardedTriggerService:
         self._seq = 0
         self._seq_lock = threading.Lock()
         self._releaser = InOrderReleaser(self._on_release)
+        if monitor:
+            mkw = dict(monitor) if isinstance(monitor, dict) else {}
+            self.monitors = [TriggerMonitor(**mkw)
+                             for _ in range(n_replicas)]
+        else:
+            self.monitors = []
+        # seq -> truth bit for in-flight events (monitoring only);
+        # written by submit, consumed by the replica batch loops.
+        self._truth: dict[int, bool] = {}
         self.replicas = []
         warmed_devices = set()
         for i, (fn, dev) in enumerate(zip(infer_fns, devices)):
@@ -178,27 +211,43 @@ class ShardedTriggerService:
                               window_s=window_s, queue_depth=queue_depth,
                               hedge_after_s=hedge_after_s, device=dev,
                               replica_id=i, inflight=inflight,
-                              warmup_fn=wf))
+                              warmup_fn=wf,
+                              monitor=self.monitors[i]
+                              if self.monitors else None,
+                              truth_map=self._truth
+                              if self.monitors else None))
         self.router = Router(self.replicas, policy)
         self._agg = AggregateStats(self.replicas)
 
     # ------------------------------------------------------------ client ----
-    def submit(self, event: dict) -> Future:
+    def submit(self, event: dict, *, truth: bool | None = None) -> Future:
         """Shard the event to a replica; returns a Future that resolves
         in global submission order.  Blocks (backpressure) when the
-        chosen replica's bounded queue is full."""
+        chosen replica's bounded queue is full.
+
+        ``truth``: optional ground-truth trigger bit; with monitoring
+        enabled it is matched against the model's decision on release,
+        feeding the snapshot's online efficiency / fake-rate."""
+        t_submit = time.perf_counter()
         with self._seq_lock:
             seq = self._seq
             self._seq += 1
+            self._agg.note_submission(t_submit)
             # pick under the lock so round-robin sees a gap-free seq
             # and least-loaded sees a consistent load snapshot.
             replica = self.router.pick(seq)
+        if truth is not None and self.monitors:
+            self._truth[seq] = bool(truth)   # before enqueue: release
+            #                      can only happen after the enqueue.
         fut: Future = Future()
-        replica.enqueue(seq, time.perf_counter(), event, fut)
+        replica.enqueue(seq, t_submit, event, fut)
         return fut
 
     # ----------------------------------------------------------- release ----
     def _on_release(self, outcome, timing: EventTiming, fut: Future):
+        # monitoring does NOT happen here: the replica batch loop has
+        # already record_raw()ed this event, so the serialized release
+        # stage stays monitoring-free.
         st = self.replicas[timing.replica_id].stats
         kind, value = outcome
         if kind == "ok":
@@ -209,6 +258,29 @@ class ShardedTriggerService:
             st.failed += 1
             if not fut.cancelled():
                 fut.set_exception(value)
+
+    # -------------------------------------------------------- monitoring ----
+    @property
+    def monitoring(self) -> bool:
+        return bool(self.monitors)
+
+    def monitor_snapshot(self) -> MonitorSnapshot:
+        """Fleet-level monitoring snapshot, pooled across the
+        per-replica monitors."""
+        if not self.monitors:
+            raise RuntimeError(
+                "monitoring is off; construct the service with "
+                "monitor=True")
+        return MonitorSnapshot.merge(self.monitors)
+
+    def event_displays(self, n: int | None = None) -> list[dict]:
+        """Most recent event-display records across all replicas, in
+        submission order."""
+        if n is not None and n <= 0:
+            return []
+        recs = [r for m in self.monitors for r in m.displays()]
+        recs.sort(key=lambda r: r["event"])
+        return recs if n is None else recs[-n:]
 
     # ----------------------------------------------------------- control ----
     @property
@@ -237,10 +309,11 @@ class TriggerServingEngine(ShardedTriggerService):
 
     def __init__(self, infer_fn, *, microbatch: int, window_s: float = 1e-3,
                  queue_depth: int = 1024,
-                 hedge_after_s: float | None = None):
+                 hedge_after_s: float | None = None, monitor=False):
         super().__init__(infer_fn, n_replicas=1, microbatch=microbatch,
                          window_s=window_s, queue_depth=queue_depth,
-                         hedge_after_s=hedge_after_s, devices=None)
+                         hedge_after_s=hedge_after_s, devices=None,
+                         monitor=monitor)
 
     @property
     def stats(self) -> ServingStats:

@@ -99,8 +99,9 @@ class ServingStats:
     queue_wait_s: deque = dataclasses.field(default_factory=_stat_window)
     dispatch_s: deque = dataclasses.field(default_factory=_stat_window)
     compute_s: deque = dataclasses.field(default_factory=_stat_window)
-    started_at: float = dataclasses.field(
-        default_factory=time.perf_counter)
+    # throughput clock: stamped by the first enqueue, not construction,
+    # so a replica built long before traffic reports an honest rate.
+    started_at: float | None = None
     lock: threading.Lock = dataclasses.field(
         default_factory=threading.Lock, repr=False, compare=False)
 
@@ -122,6 +123,8 @@ class ServingStats:
             self.compute_s.append(timing.compute_s)
 
     def throughput_ev_s(self):
+        if self.started_at is None:
+            return 0.0
         dt = time.perf_counter() - self.started_at
         return self.completed / dt if dt > 0 else 0.0
 
@@ -200,9 +203,15 @@ class ReplicaEngine:
                  microbatch: int, window_s: float = 1e-3,
                  queue_depth: int = 1024, hedge_after_s: float | None = None,
                  device=None, replica_id: int = 0, inflight: int = 2,
-                 warmup_fn=None):
+                 warmup_fn=None, monitor=None, truth_map=None):
         self._infer = infer_fn
         self._releaser = releaser
+        # optional per-replica TriggerMonitor: fed one record_batch per
+        # completed micro-batch (vectorized, off the per-event path);
+        # truth_map is the service-level {seq: truth} side channel,
+        # consumed here so in-flight entries can't outlive their batch.
+        self._monitor = monitor
+        self._truth_map = truth_map
         self.microbatch = microbatch
         self.window = window_s
         self.hedge_after = hedge_after_s
@@ -249,6 +258,8 @@ class ReplicaEngine:
         event's future instead of stranding it in a dead queue."""
         with self._count_lock:
             self.stats.submitted += 1
+            if self.stats.started_at is None:
+                self.stats.started_at = t_submit
         item = (seq, t_submit, event, fut)
         placed = False
         while not placed and not self._stop.is_set():
@@ -320,6 +331,8 @@ class ReplicaEngine:
         now = time.perf_counter()
         for it in items:
             seq, t_submit, fut = it[0], it[1], it[-1]
+            if self._truth_map is not None:
+                self._truth_map.pop(seq, None)
             t_collect = it[2] if len(it) == 5 else now
             timing = EventTiming(self.replica_id, t_submit, t_collect,
                                  now, now)
@@ -355,6 +368,8 @@ class ReplicaEngine:
         except Exception as exc:  # noqa: BLE001 — fault isolation: fail
             t_done = time.perf_counter()   # the batch, not the replica
             for seq, t_submit, t_collect, _, fut in items:
+                if self._truth_map is not None:
+                    self._truth_map.pop(seq, None)
                 timing = EventTiming(self.replica_id, t_submit, t_collect,
                                      t_dispatch, t_done)
                 self._releaser.complete(seq, ("err", exc), timing, fut)
@@ -366,6 +381,21 @@ class ReplicaEngine:
         # budget must include the actual device time.
         np_leaves = [np.asarray(l) for l in leaves]
         t_done = time.perf_counter()
+        if self._monitor is not None:
+            # one deque append; the truth pops stay here (not in the
+            # deferred fold) so the side-channel map stays bounded by
+            # in-flight events even if no reader ever drains.  Only
+            # the CPS subtree is staged — np.asarray after the
+            # materialization above is a cheap view, and staging the
+            # full result/items would pin inputs and futures.
+            truths = [self._truth_map.pop(it[0], None) for it in items] \
+                if self._truth_map else None
+            cps = out.get("cps", out) if isinstance(out, dict) else None
+            rec = {k: np.asarray(v) for k, v in cps.items()
+                   if not isinstance(v, dict)} \
+                if isinstance(cps, dict) else None
+            self._monitor.record_raw(
+                rec, [(it[0], it[1]) for it in items], t_done, truths)
         for i, (seq, t_submit, t_collect, _, fut) in enumerate(items):
             res = jax.tree_util.tree_unflatten(
                 tdef, [l[i] for l in np_leaves])

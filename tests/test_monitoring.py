@@ -1,0 +1,393 @@
+"""Tests: real-time monitoring subsystem — event-display geometry,
+snapshot clock consistency, truth-matched accounting, batched
+recording, the stats clocks, and the HTTP endpoint wired into a live
+``ShardedTriggerService``."""
+import json
+import time
+import urllib.error
+import urllib.request
+
+import numpy as np
+import pytest
+
+from repro.data.belle2 import Belle2Config, current_detector
+from repro.serving import (MonitorServer, MonitorSnapshot,
+                           ShardedTriggerService, TriggerMonitor,
+                           detector_grid, event_display)
+
+
+def _cps(n_valid=2, xy=None, k=4):
+    xy = np.zeros((k, 2), np.float32) if xy is None else np.asarray(xy)
+    return {
+        "trigger": np.asarray(n_valid > 0),
+        "n_clusters": np.asarray(n_valid),
+        "cluster_valid": (np.arange(k) < n_valid).astype(np.float32),
+        "cluster_e": np.linspace(1.0, 2.0, k).astype(np.float32),
+        "cluster_beta": np.full(k, 0.5, np.float32),
+        "cluster_xy": xy.astype(np.float32),
+    }
+
+
+# ----------------------------------------------------- event_display ----
+def test_detector_grid_resolution():
+    assert detector_grid(None) == (56, 156)
+    assert detector_grid(Belle2Config()) == (56, 156)
+    assert detector_grid(current_detector()) == (24, 24)
+
+    class CCNLike:        # CCNConfig carries n_crystals, not grid
+        n_crystals = 576
+    assert detector_grid(CCNLike()) == (24, 24)
+    with pytest.raises(ValueError, match="cannot infer"):
+        detector_grid(object())
+
+
+@pytest.mark.parametrize("det,grid", [(current_detector(), (24, 24)),
+                                      (Belle2Config(), (56, 156))])
+def test_event_display_uses_detector_grid(det, grid):
+    res = _cps(n_valid=2, xy=[[0.0, 0.25], [-0.25, 0.0],
+                              [0, 0], [0, 0]])
+    d = event_display(res, event_id=5, detector=det)
+    nt, nph = grid
+    assert d["grid"] == [nt, nph]
+    assert d["event"] == 5 and len(d["clusters"]) == 2
+    c0, c1 = d["clusters"]
+    # (xy + 0.5) * grid, per-axis
+    assert c0["theta"] == pytest.approx(0.5 * nt)
+    assert c0["phi"] == pytest.approx(0.75 * nph)
+    assert c1["theta"] == pytest.approx(0.25 * nt)
+    assert c1["phi"] == pytest.approx(0.5 * nph)
+
+
+def test_event_display_clips_out_of_range_coords():
+    res = _cps(n_valid=2, xy=[[-3.0, 7.0], [0.6, -0.51],
+                              [0, 0], [0, 0]])
+    for det in (current_detector(), Belle2Config()):
+        nt, nph = detector_grid(det)
+        d = event_display(res, event_id=0, detector=det)
+        for c in d["clusters"]:
+            assert 0.0 <= c["theta"] <= nt
+            assert 0.0 <= c["phi"] <= nph
+        # clipped exactly to the detector extent, not wrapped
+        assert d["clusters"][0]["theta"] == 0.0
+        assert d["clusters"][0]["phi"] == nph
+        assert d["clusters"][1]["theta"] == nt
+        assert d["clusters"][1]["phi"] == 0.0
+
+
+def test_event_display_truth_flag_optional():
+    d = event_display(_cps(), event_id=1)
+    assert "truth" not in d
+    d = event_display(_cps(), event_id=1, truth=False)
+    assert d["truth"] is False
+
+
+# ---------------------------------------------------------- snapshot ----
+def test_snapshot_clock_consistency_single_reading():
+    """snapshot() reads the clock exactly once: wall_s, window_s and
+    rate_ev_s are all derived from the same ``now``, and the rate is
+    windowed (events in window / window span), not lifetime."""
+    t = [100.0]
+
+    def clock():
+        return t[0]
+
+    mon = TriggerMonitor(window=1024, clock=clock)
+    for i in range(10):
+        t[0] = 100.0 + i          # one event per "second"
+        mon.record(_cps(), latency_s=1e-5)
+    t[0] = 120.0                  # long idle gap before the snapshot
+    snap = mon.snapshot()
+    assert snap["events"] == 10
+    assert snap["window_events"] == 10
+    assert snap["wall_s"] == pytest.approx(20.0)       # since t0=100
+    assert snap["window_s"] == pytest.approx(20.0)     # first event at 100
+    # windowed rate == window_events / window_s, from the same clock
+    assert snap["rate_ev_s"] == pytest.approx(
+        snap["window_events"] / snap["window_s"])
+    # lifetime-rate bug would have produced the same number here; the
+    # distinction shows once the window slides — see below.
+
+
+def test_snapshot_rate_is_windowed_not_lifetime():
+    t = [0.0]
+    mon = TriggerMonitor(window=8, clock=lambda: t[0])
+    # 100 events in the first second, then 8 events over 8 seconds
+    for i in range(100):
+        t[0] = i * 0.01
+        mon.record(_cps())
+    for i in range(8):
+        t[0] = 2.0 + i
+        mon.record(_cps())
+    t[0] = 10.0
+    snap = mon.snapshot()
+    assert snap["events"] == 108                # lifetime preserved
+    # the lifetime rate would be 10.8 ev/s; the windowed rate covers
+    # the last 8 events spread over 8 s ending 1 s before the snapshot
+    assert snap["rate_ev_s"] == pytest.approx(8 / 8.0)
+
+
+def test_truth_matched_efficiency_and_fake_rate():
+    mon = TriggerMonitor(window=256)
+    # 4 signal-fired, 2 signal-missed, 3 background-quiet, 1 bg-fired
+    for _ in range(4):
+        mon.record(_cps(n_valid=1), truth=True)     # fired, signal
+    for _ in range(2):
+        mon.record(_cps(n_valid=0), truth=True)     # quiet, signal
+    for _ in range(3):
+        mon.record(_cps(n_valid=0), truth=False)    # quiet, background
+    mon.record(_cps(n_valid=1), truth=False)        # fired, background
+    mon.record(_cps(n_valid=1))                     # no truth bit
+    snap = mon.snapshot()
+    assert snap["truth_events"] == 10
+    assert snap["efficiency"] == pytest.approx(4 / 6)
+    assert snap["fake_rate"] == pytest.approx(1 / 4)
+    assert snap["events"] == 11
+
+
+def test_record_batch_matches_per_event_recording():
+    k = 4
+    b = 6
+    rng = np.random.default_rng(0)
+    batch = {
+        "trigger": np.asarray([1, 0, 1, 1, 0, 1], bool),
+        "n_clusters": np.asarray([2, 0, 1, 3, 0, 2]),
+        "cluster_valid": (np.arange(k)[None, :]
+                          < np.asarray([2, 0, 1, 3, 0, 2])[:, None]),
+        "cluster_e": rng.uniform(0.1, 2.0, (b, k)).astype(np.float32),
+        "cluster_beta": rng.uniform(0, 1, (b, k)).astype(np.float32),
+        "cluster_xy": rng.uniform(-0.4, 0.4, (b, k, 2))
+        .astype(np.float32),
+    }
+    truths = [True, False, True, None, False, True]
+    lats = [1e-5 * (i + 1) for i in range(b)]
+    m_batch = TriggerMonitor(window=64)
+    m_batch.record_batch(batch, b, latencies_s=lats, truths=truths,
+                         event_ids=list(range(b)))
+    m_event = TriggerMonitor(window=64)
+    for i in range(b):
+        m_event.record({kk: vv[i] for kk, vv in batch.items()},
+                       latency_s=lats[i], truth=truths[i], event_id=i)
+    sb, se = m_batch.snapshot(), m_event.snapshot()
+    for key in ("events", "window_events", "trigger_rate",
+                "clusters_per_event", "cluster_e_mean", "truth_events",
+                "efficiency", "fake_rate", "latency_p50_us",
+                "latency_p99_us"):
+        assert sb[key] == pytest.approx(se[key]), key
+    db, de = m_batch.displays(), m_event.displays()
+    assert len(db) == len(de) == b
+    for rb, re_ in zip(db, de):
+        assert rb["event"] == re_["event"]
+        assert rb["clusters"] == re_["clusters"]
+        assert rb.get("truth") == re_.get("truth")
+
+
+def test_padding_rows_never_reach_the_monitor():
+    k = 4
+    batch = {
+        "trigger": np.asarray([1, 1, 0, 0], bool),  # rows 2,3 padding
+        "n_clusters": np.asarray([1, 1, 0, 0]),
+        "cluster_valid": np.zeros((4, k)),
+        "cluster_e": np.zeros((4, k)),
+        "cluster_beta": np.zeros((4, k)),
+        "cluster_xy": np.zeros((4, k, 2)),
+    }
+    mon = TriggerMonitor(window=64)
+    mon.record_batch(batch, 2)
+    snap = mon.snapshot()
+    assert snap["events"] == 2
+    assert snap["trigger_rate"] == 1.0
+
+
+def test_display_ring_is_bounded_and_keeps_most_recent():
+    mon = TriggerMonitor(window=4096, display_n=8)
+    for i in range(50):
+        mon.record(_cps(), event_id=i)
+    recs = mon.displays()
+    assert len(recs) == 8
+    assert [r["event"] for r in recs] == list(range(42, 50))
+    assert [r["event"] for r in mon.displays(3)] == [47, 48, 49]
+    assert mon.displays(0) == []
+
+
+def test_display_every_thins_both_paths():
+    k = 4
+    batch = {
+        "trigger": np.ones(8, bool),
+        "n_clusters": np.ones(8, np.int32),
+        "cluster_valid": np.ones((8, k)),
+        "cluster_e": np.ones((8, k), np.float32),
+        "cluster_beta": np.full((8, k), 0.5, np.float32),
+        "cluster_xy": np.zeros((8, k, 2), np.float32),
+    }
+    mb = TriggerMonitor(window=64, display_every=4)
+    mb.record_batch(batch, 8, event_ids=list(range(8)))
+    assert [r["event"] for r in mb.displays()] == [0, 4]
+    me = TriggerMonitor(window=64, display_every=4)
+    for i in range(8):
+        me.record(_cps(), event_id=i)
+    assert [r["event"] for r in me.displays()] == [0, 4]
+
+
+def test_windowed_stats_slide():
+    mon = TriggerMonitor(window=10)
+    for _ in range(20):
+        mon.record(_cps(n_valid=0))     # quiet events first
+    for _ in range(10):
+        mon.record(_cps(n_valid=2))     # window now all-firing
+    snap = mon.snapshot()
+    assert snap["events"] == 30
+    assert snap["trigger_rate"] == 1.0
+    assert snap["clusters_per_event"] == 2.0
+
+
+def test_merge_pools_across_monitors():
+    m1, m2 = TriggerMonitor(window=64), TriggerMonitor(window=64)
+    for _ in range(4):
+        m1.record(_cps(n_valid=1), latency_s=1e-5, truth=True)
+    for _ in range(4):
+        m2.record(_cps(n_valid=0), latency_s=3e-5, truth=True)
+    snap = MonitorSnapshot.merge([m1, m2])
+    assert snap["events"] == 8
+    assert snap["trigger_rate"] == pytest.approx(0.5)
+    assert snap["efficiency"] == pytest.approx(0.5)
+    assert snap["truth_events"] == 8
+    assert snap["latency_p50_us"] == pytest.approx(20.0, rel=0.01)
+
+
+# ----------------------------------------------- service integration ----
+def _cps_infer(feeds):
+    x = feeds["x"]
+    b = x.shape[0]
+    k = 4
+    fired = x > 0
+    return {"cps": {
+        "trigger": fired,
+        "n_clusters": fired.astype(np.int32) * 2,
+        "cluster_valid": np.tile(np.arange(k) < 2, (b, 1))
+        * fired[:, None],
+        "cluster_e": np.ones((b, k), np.float32),
+        "cluster_beta": np.full((b, k), 0.5, np.float32),
+        "cluster_xy": np.zeros((b, k, 2), np.float32),
+    }}
+
+
+def test_sharded_service_records_and_serves_snapshot():
+    """End to end: monitored service -> merged snapshot and /snapshot
+    endpoint agree with the engine's own serving stats; /events NDJSON
+    and the HTML display are served."""
+    svc = ShardedTriggerService(
+        _cps_infer, n_replicas=2, microbatch=4, window_s=1e-3,
+        devices=None, monitor={"detector": current_detector()})
+    n = 48
+    futs = []
+    for i in range(n):
+        fired = i % 3 != 0
+        futs.append(svc.submit({"x": np.float32(1.0 if fired else -1.0)},
+                               truth=fired))
+    for f in futs:
+        f.result(timeout=60)
+    svc.drain()
+    snap = svc.monitor_snapshot()
+    s = svc.stats.summary()
+    assert snap["events"] == s["completed"] == n
+    assert snap["efficiency"] == 1.0 and snap["fake_rate"] == 0.0
+    assert snap["trigger_rate"] == pytest.approx(2 / 3)
+    assert snap["clusters_per_event"] == pytest.approx(4 / 3)
+    displays = svc.event_displays(8)
+    assert len(displays) == 8
+    assert svc.event_displays(0) == []
+    assert all(r["grid"] == [24, 24] for r in displays)
+    seqs = [r["event"] for r in displays]
+    assert seqs == sorted(seqs)
+
+    with MonitorServer.for_service(svc, port=0) as server:
+        live = json.load(urllib.request.urlopen(
+            server.url + "/snapshot", timeout=10))
+        assert live["events"] == s["completed"]
+        assert live["efficiency"] == 1.0
+        nd = urllib.request.urlopen(
+            server.url + "/events?n=5", timeout=10).read().decode()
+        recs = [json.loads(line) for line in nd.splitlines() if line]
+        assert len(recs) == 5
+        assert all({"event", "trigger", "clusters", "grid"} <= set(r)
+                   for r in recs)
+        html = urllib.request.urlopen(
+            server.url + "/", timeout=10).read().decode()
+        assert "<svg" in html
+        with pytest.raises(urllib.error.HTTPError):
+            urllib.request.urlopen(server.url + "/nope", timeout=10)
+    svc.close()
+
+
+def test_monitor_off_by_default_and_guarded():
+    svc = ShardedTriggerService(lambda f: {"y": f["x"]}, n_replicas=1,
+                                microbatch=2, window_s=1e-3,
+                                devices=None)
+    assert not svc.monitoring and svc.monitors == []
+    with pytest.raises(RuntimeError, match="monitoring is off"):
+        svc.monitor_snapshot()
+    fut = svc.submit({"x": np.float32(1)}, truth=True)  # truth ignored
+    fut.result(timeout=30)
+    svc.drain()
+    assert svc._truth == {}
+    svc.close()
+
+
+def test_monitor_tolerates_cps_less_payloads():
+    svc = ShardedTriggerService(lambda f: {"y": f["x"]}, n_replicas=1,
+                                microbatch=2, window_s=1e-3,
+                                devices=None, monitor=True)
+    futs = [svc.submit({"x": np.float32(i)}) for i in range(6)]
+    for f in futs:
+        f.result(timeout=30)
+    svc.drain()
+    snap = svc.monitor_snapshot()
+    assert snap["events"] == 6
+    assert snap["trigger_rate"] is None
+    assert snap["latency_p50_us"] is not None
+    svc.close()
+
+
+def test_failed_batches_clean_truth_side_channel():
+    def infer(feeds):
+        if np.max(feeds["x"]) < 0:
+            raise RuntimeError("poisoned batch")
+        return _cps_infer(feeds)
+
+    svc = ShardedTriggerService(infer, n_replicas=1, microbatch=1,
+                                window_s=1e-3, devices=None,
+                                monitor=True)
+    bad = svc.submit({"x": np.float32(-1)}, truth=True)
+    good = svc.submit({"x": np.float32(2)}, truth=True)
+    with pytest.raises(RuntimeError, match="poisoned"):
+        bad.result(timeout=30)
+    good.result(timeout=30)
+    svc.drain()
+    snap = svc.monitor_snapshot()
+    assert snap["events"] == 1            # failed event not recorded
+    assert svc._truth == {}               # no leaked truth entries
+    svc.close()
+
+
+# ------------------------------------------------------- stats clocks ----
+def test_aggregate_throughput_clock_starts_at_first_submission():
+    svc = ShardedTriggerService(lambda f: {"y": f["x"]}, n_replicas=1,
+                                microbatch=8, window_s=1e-3,
+                                devices=None)
+    assert svc.stats.throughput_ev_s() == 0.0
+    idle = 0.3
+    time.sleep(idle)                  # service idles before traffic
+    n = 64
+    t0 = time.perf_counter()
+    futs = [svc.submit({"x": np.float32(i)}) for i in range(n)]
+    for f in futs:
+        f.result(timeout=30)
+    svc.drain()
+    serve_dt = time.perf_counter() - t0
+    thr = svc.stats.throughput_ev_s()
+    # construction-time clocking would cap throughput at n/idle
+    assert thr > n / (idle + serve_dt) * 0.9
+    assert thr > n / idle
+    # the per-replica clock starts at first enqueue too
+    assert svc.replicas[0].stats.summary()["throughput_ev_s"] > n / idle
+    svc.close()
