@@ -1,0 +1,120 @@
+"""Batch-packing benchmark: per-event vs batch-packed launches across
+occupancy buckets.
+
+The paper sustains 2.94 M events/s on one statically scheduled
+pipeline; the serving analogue here is that a queued micro-batch must
+NOT pay one executable launch per event. This benchmark deploys the
+current-detector CaloClusterNet once per occupancy bucket and, for
+each (bucket, microbatch) pair, times
+
+  per_event    — ``microbatch`` sequential launches of the batch-1
+                 executable (the pre-bucketing serving behavior);
+  batch_packed — one launch of the batch-packed executable
+                 (``deploy(batch=microbatch)``), i.e. the leading
+                 event grid dimension of the batched kernels.
+
+Prints harness CSV rows (``name,us_per_call,derived``) and, with
+``--out``, writes the trajectory JSON consumed by CI:
+
+    PYTHONPATH=src python benchmarks/batching.py --out BENCH_batching.json
+    PYTHONPATH=src python -m benchmarks.run batching
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+
+if __package__ in (None, ""):   # script invocation: put repo root first
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+
+from benchmarks.common import row, time_fn
+
+BUCKETS = (8, 16, 32)
+MICROBATCHES = (1, 8, 16)
+
+
+def run(out_path: str | None = None, iters: int = 5):
+    import jax
+
+    import repro.core.caloclusternet as ccn
+    from repro.core.passes.parallelize import Requirements
+    from repro.core.pipeline import _cut_hits, deploy
+    from repro.data.belle2 import current_detector, generate
+
+    cfg = ccn.current_detector_config()
+    gen = current_detector()
+    params = ccn.init(jax.random.PRNGKey(0), cfg)
+    graph = ccn.to_graph(params, cfg)
+    data = generate(gen, max(MICROBATCHES), seed=3)
+    feeds = {"hits": data["feats"], "mask": data["mask"]}
+    req = Requirements(design_point=3, platform="cpu",
+                       precision_policy="fp", n_hits=cfg.n_hits,
+                       target_throughput=5e4, max_latency_s=2e-3)
+
+    trajectory = []
+    for bucket in BUCKETS:
+        req_b = dataclasses.replace(req, n_hits=bucket)
+        fb = _cut_hits(feeds, bucket)
+        single = deploy(graph, req_b)
+        for mb in MICROBATCHES:
+            chunk = jax.tree_util.tree_map(lambda a: a[:mb], fb)
+            events = [jax.tree_util.tree_map(lambda a: a[i:i + 1], fb)
+                      for i in range(mb)]
+
+            def per_event_loop():
+                return [single(e) for e in events]
+
+            t_loop, _ = time_fn(per_event_loop, iters=iters)
+            if mb == 1:
+                t_pack, packed = t_loop, single
+            else:
+                packed = deploy(graph, req_b, batch=mb)
+                t_pack, _ = time_fn(packed, chunk, iters=iters)
+            ev_s_loop = mb / t_loop
+            ev_s_pack = mb / t_pack
+            speedup = t_loop / t_pack
+            row(f"batching_b{bucket}_mb{mb}_per_event", t_loop * 1e6,
+                f"{ev_s_loop:.0f} ev/s")
+            row(f"batching_b{bucket}_mb{mb}_batch_packed", t_pack * 1e6,
+                f"{ev_s_pack:.0f} ev/s speedup {speedup:.2f}x")
+            trajectory.append({
+                "bucket": bucket, "microbatch": mb,
+                "per_event_us": t_loop * 1e6,
+                "batch_packed_us": t_pack * 1e6,
+                "per_event_ev_s": ev_s_loop,
+                "batch_packed_ev_s": ev_s_pack,
+                "speedup": speedup,
+            })
+
+    if out_path:
+        with open(out_path, "w") as f:
+            json.dump({"detector": "current", "buckets": list(BUCKETS),
+                       "microbatches": list(MICROBATCHES),
+                       "trajectory": trajectory}, f, indent=1)
+        print(f"[batching] wrote {out_path}", file=sys.stderr)
+    return trajectory
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--iters", type=int, default=5)
+    ap.add_argument("--check", action="store_true",
+                    help="fail unless batch packing wins at every "
+                         "bucket for microbatch >= 8")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    traj = run(args.out, iters=args.iters)
+    if args.check:
+        bad = [p for p in traj
+               if p["microbatch"] >= 8 and p["speedup"] < 1.0]
+        if bad:
+            raise SystemExit(f"batching: batch packing lost at {bad}")
+
+
+if __name__ == "__main__":
+    main()

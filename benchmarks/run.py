@@ -7,6 +7,8 @@ Prints ``name,us_per_call,derived`` CSV rows.
   kernel_*    — kernel-level optimization microbenchmarks
   roofline_*  — §Roofline terms per (arch × shape) from the dry-run
   tuning_*    — autotuned vs default kernel configs (tuning cache)
+  batching_*  — per-event vs batch-packed launches across occupancy
+                buckets (the occupancy-bucketed serving path)
 
 A failing section is still reported as a ``name,nan,ERROR ...`` row (so
 one broken figure never hides the others), but the run exits nonzero —
@@ -18,7 +20,7 @@ import sys
 
 
 def main(argv: list[str] | None = None) -> int:
-    from benchmarks import (design_points, kernels_bench,
+    from benchmarks import (batching, design_points, kernels_bench,
                             parallelization_sweep, resource_table,
                             roofline, tuning_bench)
     argv = sys.argv[1:] if argv is None else argv
@@ -32,6 +34,7 @@ def main(argv: list[str] | None = None) -> int:
         "kernels": kernels_bench.run,
         "roofline": roofline.run,
         "tuning": tuning_bench.run,
+        "batching": batching.run,
     }
     if only is not None and only not in sections:
         print(f"unknown section {only!r}; have: {', '.join(sections)}",

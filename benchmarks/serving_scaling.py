@@ -18,9 +18,20 @@ Two inference backends:
       serving layer against actual compute, but thread scaling then
       depends on how much the backend releases the GIL.
 
+A third mode measures **batch packing** (the occupancy-bucketed
+serving path): ``--mode batching`` streams current-detector events
+through the service once with ``microbatch=1`` against the per-event
+executable (the pre-batching baseline: one launch per event) and once
+per requested micro-batch against the matching batch-packed
+executable (``deploy(batch=mb)``, one launch per micro-batch), and
+records the events/s speedup in the JSON's ``batching`` section.
+``--check`` then requires ≥1.5× for every micro-batch ≥ 8.
+
 Usage:
     PYTHONPATH=src python benchmarks/serving_scaling.py \
         --out /tmp/serving_scaling.json --check
+    PYTHONPATH=src python benchmarks/serving_scaling.py \
+        --mode batching --out /tmp/serving_batching.json --check
 """
 from __future__ import annotations
 
@@ -48,7 +59,9 @@ def synthetic_infer(service_us: float):
     return infer
 
 
-def pipeline_infer():
+def pipeline_infer(batch: int = 1):
+    """Current-detector CaloClusterNet executable; ``batch > 1``
+    deploys the batch-packed form (one launch per micro-batch)."""
     import jax
 
     from repro.core import caloclusternet as ccn
@@ -66,7 +79,7 @@ def pipeline_infer():
                        precision_policy="mixed", n_hits=cfg.n_hits,
                        target_throughput=2e4, max_latency_s=2e-3)
     pipe = deploy(graph, req, calibration_feeds={
-        "hits": calib["feats"], "mask": calib["mask"]})
+        "hits": calib["feats"], "mask": calib["mask"]}, batch=batch)
 
     def infer(feeds):
         return pipe({"hits": feeds["hits"], "mask": feeds["mask"]})
@@ -106,9 +119,42 @@ def run_point(infer, make_event, *, replicas, microbatch, events,
     }
 
 
+# ------------------------------------------------------------ batching ----
+def run_batching(args):
+    """Per-event baseline vs batch-packed micro-batches through the
+    real serving stack on the current-detector config."""
+    mbs = sorted(mb for mb in args.microbatches if mb > 1)
+    points = []
+    for mb in [1] + mbs:
+        infer, make_event = pipeline_infer(batch=mb)
+        # warm the compile cache so the measurement is steady-state
+        e = make_event(np.random.default_rng(0))
+        infer({k: np.stack([v] * mb) for k, v in e.items()})
+        pt = run_point(infer, make_event, replicas=1, microbatch=mb,
+                       events=args.events,
+                       window_s=args.window_ms * 1e-3, policy=args.policy)
+        points.append(pt)
+    base = points[0]["throughput_ev_s"]
+    section = []
+    print("microbatch,throughput_ev_s,speedup_vs_per_event")
+    for pt in points:
+        speedup = pt["throughput_ev_s"] / base
+        section.append({
+            "microbatch": pt["microbatch"],
+            "events": pt["events"],
+            "throughput_ev_s": pt["throughput_ev_s"],
+            "per_event_ev_s": base,
+            "speedup_vs_per_event": speedup,
+            "aggregate": pt["aggregate"],
+        })
+        print(f"{pt['microbatch']},{pt['throughput_ev_s']:.0f},"
+              f"{speedup:.2f}")
+    return section
+
+
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--mode", choices=["synthetic", "pipeline"],
+    ap.add_argument("--mode", choices=["synthetic", "pipeline", "batching"],
                     default="synthetic")
     ap.add_argument("--replicas", type=int, nargs="+", default=[1, 2, 4])
     ap.add_argument("--microbatches", type=int, nargs="+",
@@ -126,6 +172,27 @@ def main():
                     help="fail unless aggregate throughput is monotone "
                          "in replica count at every micro-batch size")
     args = ap.parse_args()
+
+    if args.mode == "batching":
+        section = run_batching(args)
+        result = {"mode": "batching", "detector": "current",
+                  "events": args.events, "batching": section}
+        with open(args.out, "w") as f:
+            json.dump(result, f, indent=1)
+        print(f"[serving_scaling] wrote {args.out}")
+        if args.check:
+            bad = [p for p in section
+                   if p["microbatch"] >= 8
+                   and p["speedup_vs_per_event"] < 1.5]
+            for p in section:
+                print(f"[serving_scaling] batching mb={p['microbatch']} "
+                      f"{p['throughput_ev_s']:.0f} ev/s "
+                      f"({p['speedup_vs_per_event']:.2f}x per-event)")
+            if bad:
+                raise SystemExit(
+                    "serving_scaling: batch packing under 1.5x vs the "
+                    f"per-event baseline at {[p['microbatch'] for p in bad]}")
+        return
 
     if args.mode == "synthetic":
         infer = synthetic_infer(args.service_us)

@@ -4,5 +4,6 @@ kernel-level optimization) for real-time dynamic-GNN trigger inference,
 plus CaloClusterNet itself and the object-condensation machinery."""
 from repro.core.graph_ir import Graph, Operator
 from repro.core.passes.parallelize import Requirements
-from repro.core.pipeline import CompiledPipeline, deploy
+from repro.core.pipeline import (BucketedPipeline, CompiledPipeline, deploy,
+                                 deploy_bucketed)
 from repro.core import caloclusternet, condensation, quantization

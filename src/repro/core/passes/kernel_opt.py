@@ -48,12 +48,21 @@ def _pick_block(v: int, cap: int) -> int:
     return p
 
 
-def fused_dense_shape(op, n_rows: int) -> tuple[int, int, int]:
+def fused_dense_shape(op, n_rows: int, batch: int = 1) -> tuple[int, int, int]:
     """(rows, d_in, d_out) of the matmul this op launches per step —
-    the tuning-cache problem shape (shared with the autotuner)."""
+    the tuning-cache problem shape (shared with the autotuner).
+
+    ``batch`` is the micro-batch width of a *batch-packed* executable
+    (occupancy-bucketed serving): dense kernels row-pack events, so the
+    batch dimension folds into ``rows`` (one launch sees batch·n_rows
+    rows). ``batch=1`` is the legacy per-step shape, where rows scale
+    with the segment's spatial parallelization P instead."""
     d_in = op.params["w"].shape[0]
     d_out = op.out_dim or op.params["w"].shape[1]
-    rows = n_rows * op.attrs_opt.get("P", 1)
+    if batch > 1:
+        rows = n_rows * batch
+    else:
+        rows = n_rows * op.attrs_opt.get("P", 1)
     return rows, d_in, d_out
 
 
@@ -66,15 +75,18 @@ def fused_dense_dtype(op) -> str:
     return "float32"
 
 
-def kernel_optimize(g: Graph, *, n_rows: int = 128, tuning_cache=None,
-                    backend: str = "xla") -> Graph:
+def kernel_optimize(g: Graph, *, n_rows: int = 128, batch: int = 1,
+                    tuning_cache=None, backend: str = "xla") -> Graph:
+    """``n_rows`` is the per-event graph size (the occupancy bucket when
+    bucketed); ``batch`` the packed micro-batch width (1 = per-event
+    executable, unchanged legacy bindings and cache keys)."""
     g = g.clone()
 
     # 1. variant selection / block tuning (cached winner > heuristic)
     for op in g:
         if op.template != "fused_dense":
             continue
-        rows, d_in, d_out = fused_dense_shape(op, n_rows)
+        rows, d_in, d_out = fused_dense_shape(op, n_rows, batch)
         tuned = None
         if tuning_cache is not None:
             from repro.tuning.cache import fused_dense_key
@@ -104,7 +116,7 @@ def kernel_optimize(g: Graph, *, n_rows: int = 128, tuning_cache=None,
                 continue
             tuned = tuning_cache.lookup(gravnet_key(
                 n_rows, op.attrs["d_s"], op.attrs["d_f"], op.attrs["k"],
-                "float32", backend))
+                "float32", backend, batch=batch))
             if tuned is not None and "bm" in tuned:
                 op.attrs_opt["bm"] = tuned["bm"]
 

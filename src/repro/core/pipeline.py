@@ -155,17 +155,24 @@ class _Executor:
         # float path (fp/bf16 or uncalibrated int8 falls back to fp)
         dt = jnp.bfloat16 if prec == "bf16" else jnp.float32
         xf = _as_fp(x, dt)
+        if xf.shape[-1] > w.shape[0]:   # lane128-padded input
+            w = jnp.pad(w, ((0, xf.shape[-1] - w.shape[0]), (0, 0)))
+        kw = dict(activation=act, variant=variant,
+                  bm=op.attrs_opt.get("bm", 128),
+                  bn=op.attrs_opt.get("bn", 128),
+                  bk=op.attrs_opt.get("bk", 512), backend=self.backend)
+        wd = w.astype(dt)
+        bd = None if b is None else b.astype(dt)
+        if xf.ndim == 3 and variant == "looped":
+            # row-packs the micro-batch into the SAME (B·hits, d) looped
+            # launch the autotuner times for this op's cache key
+            return kops.fused_dense_batched(xf, wd, bd, **kw)
+        # flattened stays row-packed into one whole-operand cell — the
+        # problem shape the tuner measured; the grid-(B,) per-event form
+        # is for callers wanting per-event cell residency (see
+        # docs/kernels.md)
         lead = xf.shape[:-1]
-        x2 = xf.reshape(-1, xf.shape[-1])
-        if x2.shape[-1] > w.shape[0]:
-            w = jnp.pad(w, ((0, x2.shape[-1] - w.shape[0]), (0, 0)))
-        y = kops.fused_dense(x2, w.astype(dt),
-                             None if b is None else b.astype(dt),
-                             activation=act, variant=variant,
-                             bm=op.attrs_opt.get("bm", 128),
-                             bn=op.attrs_opt.get("bn", 128),
-                             bk=op.attrs_opt.get("bk", 512),
-                             backend=self.backend)
+        y = kops.fused_dense(xf.reshape(-1, xf.shape[-1]), wd, bd, **kw)
         return y.reshape(*lead, y.shape[-1])
 
     def _gravnet(self, op, vals, prec):
@@ -173,9 +180,11 @@ class _Executor:
         ds, df = op.attrs["d_s"], op.attrs["d_f"]
         sf = _as_fp(s)[..., :ds]
         ff = _as_fp(f)[..., :df]
-        agg = jax.vmap(lambda a, b_, m: kops.gravnet_aggregate(
-            a, b_, m, k=op.attrs["k"], scale=op.attrs["scale"],
-            bm=op.attrs_opt.get("bm"), backend=self.backend))(sf, ff, mask)
+        # one batched launch for the whole micro-batch (leading event
+        # grid dim, per-event masking keeps selection block-diagonal)
+        agg = kops.gravnet_aggregate_batched(
+            sf, ff, mask, k=op.attrs["k"], scale=op.attrs["scale"],
+            bm=op.attrs_opt.get("bm"), backend=self.backend)
         if prec == "int8" and "act_scale" in op.attrs:
             # model 8-bit FPGA-fabric arithmetic: snap to the int8 grid
             sc = op.attrs["act_scale"]
@@ -208,14 +217,20 @@ class _Executor:
 
 # ---------------------------------------------------------- compiled object ----
 class CompiledPipeline:
-    def __init__(self, graph: Graph, req: Requirements, backend: str):
+    def __init__(self, graph: Graph, req: Requirements, backend: str,
+                 *, batch: int = 1):
         self.graph = graph
         self.req = req
         self.backend = backend
         self.segments = segments(graph)
         par = graph.meta.get("parallelization",
                              {"P_mxu": 1, "P_xla": 1, "microbatch": 1})
-        self.microbatch = par["microbatch"]
+        # batch > 1 pins a *batch-packed* executable: the whole
+        # micro-batch runs through every segment in one launch (no
+        # P-chunking), matching the batched kernel grid shapes that
+        # kernel_optimize(batch=...) keyed the tuning cache with.
+        self.batch_packed = batch > 1
+        self.microbatch = batch if self.batch_packed else par["microbatch"]
         self.par = par
         self._ex = _Executor(graph, req, backend)
         self._fused = bool(graph.meta.get("fuse_pipeline"))
@@ -256,7 +271,7 @@ class CompiledPipeline:
             mb = self.microbatch
 
             def fn(env_in, feeds):
-                if p_seg >= mb or mb == 1:
+                if self.batch_packed or p_seg >= mb or mb == 1:
                     return body(env_in, feeds)
                 nchunk = mb // p_seg
 
@@ -379,7 +394,14 @@ class CompiledPipeline:
 # -------------------------------------------------------------------- deploy ----
 def deploy(model_graph: Graph, req: Requirements, *,
            calibration_feeds=None, kernel_backend: str | None = None,
-           tuning_cache=None) -> CompiledPipeline:
+           tuning_cache=None, batch: int = 1) -> CompiledPipeline:
+    """Run the design flow and emit one executable.
+
+    ``batch > 1`` emits a *batch-packed* executable: kernels are bound
+    (and tuning-cache keys derived) for the shapes one whole
+    micro-batch launches, and the compiled object processes ``batch``
+    events per launch with no per-segment chunking. ``batch=1`` is the
+    legacy per-event-shaped executable."""
     backend = kernel_backend or ("pallas" if req.platform == "tpu" else "xla")
     from repro.core.passes.verify import verify
     verify(model_graph)  # legality check before any rewrite
@@ -400,11 +422,167 @@ def deploy(model_graph: Graph, req: Requirements, *,
                                      "model_throughput_ev_s": None,
                                      "target": req.target_throughput}
     if req.design_point >= 3:
-        g = kernel_optimize(g, n_rows=req.n_hits, tuning_cache=tuning_cache,
-                            backend=backend)
-    pipe = CompiledPipeline(g, req, backend)
+        g = kernel_optimize(g, n_rows=req.n_hits, batch=batch,
+                            tuning_cache=tuning_cache, backend=backend)
+    pipe = CompiledPipeline(g, req, backend, batch=batch)
     if req.precision_policy == "mixed":
         if calibration_feeds is None:
             raise ValueError("mixed precision requires calibration_feeds")
         pipe.calibrate(calibration_feeds)
     return pipe
+
+
+# ----------------------------------------------------- bucketed deployment ----
+def _cut_hits(feeds: dict, n: int) -> dict:
+    """Slice (or zero-pad) every feed's hit axis (axis 1) to exactly
+    ``n`` rows. Events are energy-sorted upstream (data/belle2), so an
+    overflow slice keeps the hardest hits. Already-cut feeds (the
+    serving dispatch path — ``submit`` cuts per event) pass through
+    untouched, so the hot path pays no copy."""
+    out = {}
+    for key, v in feeds.items():
+        if v.shape[1] == n:
+            out[key] = v
+        elif v.shape[1] > n:
+            out[key] = v[:, :n]
+        else:
+            pw = [(0, 0)] * v.ndim
+            pw[1] = (0, n - v.shape[1])
+            out[key] = jnp.pad(jnp.asarray(v), pw)
+    return out
+
+
+class BucketedPipeline:
+    """Occupancy-bucketed, batch-packed deployment.
+
+    One ``CompiledPipeline`` per (bucket, microbatch) pair: events are
+    classified by non-zero hit count and run through the smallest
+    bucket executable that fits them (overflow → largest bucket), so
+    low-occupancy events stop paying the full-detector launch.
+    ``__call__`` reproduces the single-pipeline API — it classifies a
+    feed batch, packs each bucket's events into ``microbatch``-wide
+    launches, and reassembles results in submission order (per-hit
+    output heads are zero-padded up to the widest bucket used so the
+    batch stacks). Serving integrates through ``infer_fns()`` +
+    ``classify()`` (see ``serving.ShardedTriggerService(buckets=…)``).
+    """
+
+    def __init__(self, pipes: dict[int, CompiledPipeline], *,
+                 microbatch: int, mask_feed: str = "mask",
+                 example_feeds: dict | None = None):
+        if not pipes:
+            raise ValueError("BucketedPipeline: no bucket executables")
+        self.pipes = {b: pipes[b] for b in sorted(pipes)}
+        self.buckets = tuple(sorted(pipes))
+        self.microbatch = microbatch
+        self.mask_feed = mask_feed
+        # example feeds (calibration slice) drive warmup compilation
+        self._example = example_feeds
+
+    # ------------------------------------------------------- classification --
+    def classify(self, occupancy: int) -> int:
+        from repro.serving.router import pick_bucket
+        return pick_bucket(occupancy, self.buckets)
+
+    def _occupancies(self, feeds):
+        import numpy as np
+        return np.count_nonzero(
+            np.asarray(feeds[self.mask_feed]) > 0, axis=1)
+
+    # --------------------------------------------------------------- infer --
+    def __call__(self, feeds):
+        import numpy as np
+        occ = self._occupancies(feeds)
+        b_total = occ.shape[0]
+        groups: dict[int, list[int]] = {}
+        for i, o in enumerate(occ):
+            groups.setdefault(self.classify(int(o)), []).append(i)
+        per_bucket = []
+        for bucket, idxs in sorted(groups.items()):
+            sub = jax.tree_util.tree_map(
+                lambda a: jnp.asarray(a)[jnp.asarray(idxs)], feeds)
+            out = self.pipes[bucket](_cut_hits(sub, bucket))
+            per_bucket.append((idxs, out))
+        # reassemble in submission order; pad differing per-hit axes
+        # (axis 1) up to the widest bucket used in this call
+        leaves0, tdef = jax.tree_util.tree_flatten(per_bucket[0][1])
+        flat = [(idxs, jax.tree_util.tree_flatten(out)[0])
+                for idxs, out in per_bucket]
+        result_leaves = []
+        for li in range(len(leaves0)):
+            parts = [(idxs, np.asarray(ls[li])) for idxs, ls in flat]
+            widest = max(p.shape[1] if p.ndim >= 2 else 0
+                         for _, p in parts)
+            buf = None
+            for idxs, p in parts:
+                if p.ndim >= 2 and p.shape[1] < widest:
+                    pw = [(0, 0)] * p.ndim
+                    pw[1] = (0, widest - p.shape[1])
+                    p = np.pad(p, pw)
+                if buf is None:
+                    buf = np.zeros((b_total, *p.shape[1:]), p.dtype)
+                buf[np.asarray(idxs)] = p
+            result_leaves.append(buf)
+        return jax.tree_util.tree_unflatten(tdef, result_leaves)
+
+    # ------------------------------------------------------------- serving --
+    def infer_fns(self) -> dict:
+        """{bucket: infer_fn} for the serving layer; each fn expects
+        feeds already cut to its bucket's hit count (the service slices
+        on submit) and runs one batch-packed launch."""
+        return {b: (lambda feeds, _p=self.pipes[b], _b=b:
+                    _p(_cut_hits(feeds, _b)))
+                for b in self.buckets}
+
+    def warmup_one(self, bucket: int) -> int:
+        """Pre-compile one bucket's (bucket, microbatch) executable;
+        returns 1 when warmed (0 with no example feeds). The serving
+        layer calls this once per (device, bucket) so a bucket's
+        replicas never pay for their siblings' shapes."""
+        if self._example is None:
+            return 0
+        ex = jax.tree_util.tree_map(
+            lambda a: jnp.asarray(a)[:self.microbatch], self._example)
+        # CompiledPipeline.__call__ pads any batch up to the microbatch
+        # multiple, so a short example still compiles the served shape
+        jax.block_until_ready(jax.tree_util.tree_leaves(
+            self.pipes[bucket](_cut_hits(ex, bucket))))
+        return 1
+
+    def warmup(self) -> int:
+        """Pre-compile every (bucket, microbatch) executable so the
+        first real event of any occupancy never pays jit tracing.
+        Returns the number of bucket executables warmed."""
+        return sum(self.warmup_one(b) for b in self.buckets)
+
+    # ----------------------------------------------------------- reporting --
+    def resource_report(self):
+        return {b: p.resource_report() for b, p in self.pipes.items()}
+
+
+def deploy_bucketed(model_graph: Graph, req: Requirements, *,
+                    buckets=(32, 64, 128), microbatch: int = 8,
+                    calibration_feeds=None,
+                    kernel_backend: str | None = None,
+                    tuning_cache=None) -> BucketedPipeline:
+    """Run the design flow once per occupancy bucket.
+
+    Each bucket b gets its own batch-packed executable deployed at
+    ``n_hits=b`` (kernel bindings, tuning keys, and precision
+    calibration all see the bucket's true shape). ``calibration_feeds``
+    are sliced to each bucket's hit count, so int8 activation scales
+    are calibrated on the occupancy tier they will serve."""
+    import dataclasses as _dc
+    bs = sorted(set(int(b) for b in buckets))
+    if not bs or bs[0] <= 0:
+        raise ValueError(f"invalid buckets {buckets!r}")
+    pipes = {}
+    for b in bs:
+        req_b = _dc.replace(req, n_hits=b)
+        calib_b = None if calibration_feeds is None \
+            else _cut_hits(calibration_feeds, b)
+        pipes[b] = deploy(model_graph, req_b, calibration_feeds=calib_b,
+                          kernel_backend=kernel_backend,
+                          tuning_cache=tuning_cache, batch=microbatch)
+    return BucketedPipeline(pipes, microbatch=microbatch,
+                            example_feeds=calibration_feeds)

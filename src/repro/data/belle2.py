@@ -11,6 +11,25 @@ trigger front-end reads out the ``n_hits`` highest-energy crystals
 Per-hit features: (E, θ_norm, φ_norm, t). Per-hit labels for object
 condensation: object_id (cluster idx or −1 for noise), true cluster
 energy, class (0 photon, 1 hadron, 2 background).
+
+Occupancy knob: by default an event's non-zero hit count is whatever
+physics produced (clusters + noise, capped at ``n_hits``) — with the
+default cluster/noise rates that clusters tightly near the cap, so
+every event looks like a maximum-occupancy event and an
+occupancy-bucketed serving path (``deploy_bucketed``) is untestable.
+``Belle2Config.occupancy`` fixes that: a tuple of ``(max_hits, weight)``
+pairs defines a per-event distribution over occupancy caps; each event
+draws a cap (weights normalized) and keeps only its ``cap``
+highest-energy hits, emulating the real detector's occupancy spread
+(most trigger events fire a small fraction of the readout). Example::
+
+    cfg = dataclasses.replace(current_detector(),
+                              occupancy=((8, 0.5), (16, 0.3), (32, 0.2)))
+
+``occupancy=None`` (default) preserves the legacy behavior exactly;
+``with_occupancy(cfg, buckets, weights)`` builds the tuple for a
+bucket list. Draws consume the same seeded generator as the rest of
+the event, so generation stays deterministic per seed.
 """
 from __future__ import annotations
 
@@ -32,11 +51,25 @@ class Belle2Config:
     cluster_sigma: float = 1.1       # crystals
     hadron_frac: float = 0.3
     time_jitter: float = 0.2
+    # per-event occupancy-cap distribution: ((max_hits, weight), ...);
+    # None = legacy behavior (no cap below n_hits). See module docstring.
+    occupancy: tuple | None = None
 
 
 def current_detector() -> Belle2Config:
     return Belle2Config(n_crystals=576, grid=(24, 24), n_hits=32,
                         noise_rate=8.0)
+
+
+def with_occupancy(cfg: Belle2Config, buckets, weights=None) -> Belle2Config:
+    """Config copy whose events spread over ``buckets`` occupancy caps
+    (uniform weights unless given) — the natural companion of an
+    occupancy-bucketed deployment over the same bucket list."""
+    bs = [int(b) for b in buckets]
+    ws = [1.0] * len(bs) if weights is None else [float(w) for w in weights]
+    if len(ws) != len(bs):
+        raise ValueError(f"{len(bs)} buckets but {len(ws)} weights")
+    return dataclasses.replace(cfg, occupancy=tuple(zip(bs, ws)))
 
 
 def generate(cfg: Belle2Config, batch: int, seed: int):
@@ -45,6 +78,13 @@ def generate(cfg: Belle2Config, batch: int, seed: int):
     rng = np.random.default_rng(seed)
     nt, nph = cfg.grid
     b, n = batch, cfg.n_hits
+    caps, cap_p = None, None
+    if cfg.occupancy is not None:
+        caps = np.asarray([c for c, _ in cfg.occupancy], np.int64)
+        w = np.asarray([w for _, w in cfg.occupancy], np.float64)
+        if caps.size == 0 or (w < 0).any() or w.sum() <= 0:
+            raise ValueError(f"invalid occupancy profile {cfg.occupancy!r}")
+        cap_p = w / w.sum()
     feats = np.zeros((b, n, 4), np.float32)
     mask = np.zeros((b, n), np.float32)
     obj = np.full((b, n), -1, np.int32)
@@ -84,7 +124,8 @@ def generate(cfg: Belle2Config, batch: int, seed: int):
 
         flat = e_grid.reshape(-1)
         nz = np.flatnonzero(flat > 0.01)
-        order = nz[np.argsort(-flat[nz])][:n]
+        cap = n if caps is None else min(n, int(rng.choice(caps, p=cap_p)))
+        order = nz[np.argsort(-flat[nz])][:cap]
         m = order.size
         t_idx, p_idx = np.unravel_index(order, (nt, nph))
         feats[ev, :m, 0] = flat[order]

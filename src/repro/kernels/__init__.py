@@ -7,8 +7,14 @@
                 aggregation, reformulated MXU-natively (argmin/one-hot
                 matmul instead of kNN gather).
 
+Both kernels also have *batched* entry points (``fused_dense_batched``,
+``gravnet_aggregate_batched``) with a leading event grid dimension so a
+whole serving micro-batch amortizes one launch; per-event masking keeps
+GravNet neighbor selection block-diagonal (see docs/kernels.md).
+
 ops.py holds the jit'd public wrappers (backend='xla'|'pallas'|
 'pallas_interpret'|'auto'); ref.py holds the pure-jnp oracles.
 """
-from repro.kernels.ops import (fused_dense, fused_dense_int8,
-                               gravnet_aggregate)
+from repro.kernels.ops import (fused_dense, fused_dense_batched,
+                               fused_dense_int8, gravnet_aggregate,
+                               gravnet_aggregate_batched)

@@ -70,6 +70,16 @@ def _flattened_kernel(x_ref, w_ref, b_ref, o_ref, *, activation, out_dtype):
     o_ref[...] = _activate(y, activation).astype(out_dtype)
 
 
+def _flattened_kernel_batched(x_ref, w_ref, b_ref, o_ref, *, activation,
+                              out_dtype):
+    # leading block dim 1 = one event per grid cell; weights/bias are
+    # shared across the event grid (their BlockSpecs ignore the index)
+    y = jnp.dot(x_ref[0], w_ref[...], preferred_element_type=jnp.float32)
+    if b_ref is not None:
+        y = y + b_ref[...].astype(jnp.float32)
+    o_ref[0] = _activate(y, activation).astype(out_dtype)
+
+
 def fused_dense_pallas(x, w, b=None, *, activation="relu", variant="looped",
                        bm=128, bn=128, bk=512, out_dtype=None,
                        interpret=False):
@@ -127,6 +137,57 @@ def fused_dense_pallas(x, w, b=None, *, activation="relu", variant="looped",
         in_specs=in_specs,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(*((x, w, b2) if has_b else (x, w)))
+
+
+def fused_dense_batched_pallas(x, w, b=None, *, activation="relu",
+                               variant="flattened", bm=128, bn=128, bk=512,
+                               out_dtype=None, interpret=False):
+    """Micro-batched fused dense in ONE kernel launch.
+
+    x:(B,M,K) w:(K,N) b:(N,)|None -> (B,M,N). Two batch-packing forms,
+    mirroring the per-event variants:
+
+    - ``flattened`` — grid (B,): the leading grid dimension walks one
+      event per cell with the whole per-event operand set VMEM-resident
+      (weights shared across cells). Keeps the tiny-matrix issue
+      efficiency of the flattened kernel while amortizing the launch
+      over the micro-batch.
+    - ``looped``    — events are *row-packed*: (B,M,K) reshapes to
+      (B·M, K) and reuses the grid-tiled looped kernel, so the MXU sees
+      one tall matmul (dense ops have no cross-row coupling, so packing
+      is exact). The caller's (bm, bn, bk) tile the packed shape.
+    """
+    bsz, m, kdim = x.shape
+    _, n = w.shape
+    out_dtype = out_dtype or x.dtype
+    if variant == "looped":
+        y = fused_dense_pallas(x.reshape(bsz * m, kdim), w, b,
+                               activation=activation, variant="looped",
+                               bm=bm, bn=bn, bk=bk, out_dtype=out_dtype,
+                               interpret=interpret)
+        return y.reshape(bsz, m, n)
+    assert variant == "flattened", variant
+    b2 = None if b is None else b.reshape(1, n)
+    has_b = b2 is not None
+    if has_b:
+        kern = functools.partial(_flattened_kernel_batched,
+                                 activation=activation, out_dtype=out_dtype)
+    else:
+        kern = lambda x_ref, w_ref, o_ref: _flattened_kernel_batched(  # noqa: E731
+            x_ref, w_ref, None, o_ref, activation=activation,
+            out_dtype=out_dtype)
+    in_specs = [pl.BlockSpec((1, m, kdim), lambda e: (e, 0, 0)),
+                pl.BlockSpec((kdim, n), lambda e: (0, 0))]
+    if has_b:
+        in_specs.append(pl.BlockSpec((1, n), lambda e: (0, 0)))
+    return pl.pallas_call(
+        kern,
+        grid=(bsz,),
+        out_shape=jax.ShapeDtypeStruct((bsz, m, n), out_dtype),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, m, n), lambda e: (e, 0, 0)),
         interpret=interpret,
     )(*((x, w, b2) if has_b else (x, w)))
 

@@ -25,6 +25,16 @@ irregular side. Cost: k·N²·d_f MACs ≈ MXU noise at these sizes.
 
 Grid: rows are tiled (bm per step); the full S/F/mask operands stay VMEM
 resident (N ≤ ~4096 fits comfortably: 4096×(d_s+d_f)×4B ≪ 128 MiB).
+
+BATCHED (occupancy-bucketed) FORM: ``gravnet_aggregate_batched_pallas``
+adds a leading *event* grid dimension — grid (B, N/bm) — so one kernel
+launch processes a whole serving micro-batch. Each grid cell still sees
+exactly one event's operands (BlockSpecs slice the batch axis one event
+at a time), so neighbor selection stays block-diagonal by construction:
+no cross-event edges are even representable, and per-event masking is
+unchanged. The cell body is byte-identical to the per-event kernel
+(shared ``_gravnet_cell``), which is what makes the batched path
+bitwise-equal in f32 to a loop of per-event launches (tested).
 """
 from __future__ import annotations
 
@@ -35,13 +45,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _gravnet_kernel(si_ref, s_ref, f_ref, mask_ref, o_ref, *, k, scale, bm,
-                    out_dtype):
-    i = pl.program_id(0)
-    si = si_ref[...].astype(jnp.float32)           # (bm, ds) row block
-    sj = s_ref[...].astype(jnp.float32)            # (n, ds)  all coords
-    fj = f_ref[...].astype(jnp.float32)            # (n, df)  all features
-    maskj = mask_ref[...][:, 0]                    # (n,)     validity
+def _gravnet_cell(si, sj, fj, maskj, i, *, k, scale, bm, out_dtype):
+    """One row-block of one event: si:(bm,ds) against sj:(n,ds)/fj:(n,df)
+    with validity maskj:(n,); ``i`` is the row-block index within the
+    event. Shared verbatim by the per-event and batched kernels."""
     n = sj.shape[0]
     df = fj.shape[1]
 
@@ -77,7 +84,29 @@ def _gravnet_kernel(si_ref, s_ref, f_ref, mask_ref, o_ref, *, k, scale, bm,
                                               (d2, mean_acc, max_acc))
     mean = mean_acc / jnp.float32(k)
     maxv = jnp.where(max_acc <= -big * 0.5, 0.0, max_acc)
-    o_ref[...] = jnp.concatenate([mean, maxv], axis=1).astype(out_dtype)
+    return jnp.concatenate([mean, maxv], axis=1).astype(out_dtype)
+
+
+def _gravnet_kernel(si_ref, s_ref, f_ref, mask_ref, o_ref, *, k, scale, bm,
+                    out_dtype):
+    o_ref[...] = _gravnet_cell(
+        si_ref[...].astype(jnp.float32),       # (bm, ds) row block
+        s_ref[...].astype(jnp.float32),        # (n, ds)  all coords
+        f_ref[...].astype(jnp.float32),        # (n, df)  all features
+        mask_ref[...][:, 0],                   # (n,)     validity
+        pl.program_id(0), k=k, scale=scale, bm=bm, out_dtype=out_dtype)
+
+
+def _gravnet_kernel_batched(si_ref, s_ref, f_ref, mask_ref, o_ref, *, k,
+                            scale, bm, out_dtype):
+    # leading block dim is 1 (one event per grid cell along axis 0);
+    # [0] drops it so the cell body is identical to the per-event form
+    o_ref[0] = _gravnet_cell(
+        si_ref[0].astype(jnp.float32),
+        s_ref[0].astype(jnp.float32),
+        f_ref[0].astype(jnp.float32),
+        mask_ref[0][:, 0],
+        pl.program_id(1), k=k, scale=scale, bm=bm, out_dtype=out_dtype)
 
 
 def gravnet_aggregate_pallas(s, f, mask, *, k=8, scale=10.0, bm=None,
@@ -106,5 +135,40 @@ def gravnet_aggregate_pallas(s, f, mask, *, k=8, scale=10.0, bm=None,
             pl.BlockSpec((n, 1), lambda i: (0, 0)),             # mask
         ],
         out_specs=pl.BlockSpec((bm, 2 * df), lambda i: (i, 0)),
+        interpret=interpret,
+    )(s, s, f, mask2)
+
+
+def gravnet_aggregate_batched_pallas(s, f, mask, *, k=8, scale=10.0,
+                                     bm=None, out_dtype=None,
+                                     interpret=False):
+    """Micro-batched GravNet aggregation in ONE kernel launch.
+
+    s:(B,N,ds) f:(B,N,df) mask:(B,N) -> (B, N, 2·df). Grid is
+    (B, N/bm): the leading grid dimension walks events, so the whole
+    micro-batch amortizes a single launch while every cell sees exactly
+    one event's operands — neighbor selection is block-diagonal and no
+    cross-event edge can form. f32 results are bitwise identical to B
+    per-event launches (same cell body, same schedule).
+    """
+    b, n, ds = s.shape
+    df = f.shape[2]
+    out_dtype = out_dtype or f.dtype
+    bm = bm or min(n, 128)
+    assert n % bm == 0, (n, bm)
+    mask2 = mask.reshape(b, n, 1).astype(jnp.float32)
+    kern = functools.partial(_gravnet_kernel_batched, k=k, scale=scale,
+                             bm=bm, out_dtype=out_dtype)
+    return pl.pallas_call(
+        kern,
+        grid=(b, n // bm),
+        out_shape=jax.ShapeDtypeStruct((b, n, 2 * df), out_dtype),
+        in_specs=[
+            pl.BlockSpec((1, bm, ds), lambda e, i: (e, i, 0)),   # row block
+            pl.BlockSpec((1, n, ds), lambda e, i: (e, 0, 0)),    # all coords
+            pl.BlockSpec((1, n, df), lambda e, i: (e, 0, 0)),    # all feats
+            pl.BlockSpec((1, n, 1), lambda e, i: (e, 0, 0)),     # mask
+        ],
+        out_specs=pl.BlockSpec((1, bm, 2 * df), lambda e, i: (e, i, 0)),
         interpret=interpret,
     )(s, s, f, mask2)

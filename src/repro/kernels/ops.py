@@ -19,9 +19,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref as _ref
-from repro.kernels.fused_dense import (fused_dense_int8_pallas,
+from repro.kernels.fused_dense import (fused_dense_batched_pallas,
+                                       fused_dense_int8_pallas,
                                        fused_dense_pallas)
-from repro.kernels.gravnet import gravnet_aggregate_pallas
+from repro.kernels.gravnet import (gravnet_aggregate_batched_pallas,
+                                   gravnet_aggregate_pallas)
 
 
 def _resolve(backend: str) -> str:
@@ -110,6 +112,63 @@ def gravnet_aggregate(s, f, mask, *, k=8, scale=10.0, bm=None,
     y = gravnet_aggregate_pallas(sp, fp, mp, k=k, scale=scale, bm=bm,
                                  interpret=interpret)
     return y[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("k", "scale", "bm", "backend"))
+def gravnet_aggregate_batched(s, f, mask, *, k=8, scale=10.0, bm=None,
+                              backend="auto"):
+    """Micro-batched GravNet aggregation — one launch per micro-batch.
+
+    s:(B,N,ds), f:(B,N,df), mask:(B,N) -> (B, N, 2·df). The batched
+    Pallas kernel runs grid (B, N/bm) with per-event masking, so
+    neighbor selection stays block-diagonal (no cross-event edges) and
+    f32 results match a loop of per-event calls bitwise.
+    """
+    backend = _resolve(backend)
+    if backend == "xla":
+        return jax.vmap(lambda a, b_, m: _ref.gravnet_aggregate_ref(
+            a, b_, m, k=k, scale=scale))(s, f, mask)
+    interpret = backend == "pallas_interpret"
+    n = s.shape[1]
+    bm = bm or min(n, 128)
+    sp = _pad_to(s, bm, 1)
+    fp = _pad_to(f, bm, 1)
+    mp = _pad_to(mask.astype(jnp.float32), bm, 1)
+    y = gravnet_aggregate_batched_pallas(sp, fp, mp, k=k, scale=scale,
+                                         bm=bm, interpret=interpret)
+    return y[:, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("activation", "variant", "bm",
+                                             "bn", "bk", "backend"))
+def fused_dense_batched(x, w, b=None, *, activation="relu",
+                        variant="flattened", bm=128, bn=128, bk=512,
+                        backend="auto"):
+    """act(x @ w + b) over a micro-batch x:(B,M,K) in one launch.
+
+    ``flattened`` keeps one event per grid cell (whole-operand VMEM
+    residency, weights shared); ``looped`` row-packs the batch into a
+    (B·M, K) matmul. Dense has no cross-row coupling, so both are exact
+    batch packings of the per-event kernel.
+    """
+    backend = _resolve(backend)
+    if backend == "xla":
+        return _ref.fused_dense_ref(x, w, b, activation=activation)
+    interpret = backend == "pallas_interpret"
+    bsz, m, kdim = x.shape
+    n = w.shape[1]
+    if variant == "looped":
+        xp = _pad_to(_pad_to(x.reshape(bsz * m, kdim), bm, 0), bk, 1)
+        wp = _pad_to(_pad_to(w, bk, 0), bn, 1)
+        bp = None if b is None else _pad_to(b, bn, 0)
+        y = fused_dense_pallas(xp, wp, bp, activation=activation,
+                               variant="looped", bm=bm, bn=bn, bk=bk,
+                               out_dtype=x.dtype, interpret=interpret)
+        return y[:bsz * m, :n].reshape(bsz, m, n)
+    y = fused_dense_batched_pallas(x, w, b, activation=activation,
+                                   variant="flattened", out_dtype=x.dtype,
+                                   interpret=interpret)
+    return y[..., :n]
 
 
 # --------------------------------------------------------- flash attention ----

@@ -9,6 +9,11 @@ plus the real-time monitoring pipeline (paper §III-B): an online
 ``MonitorSnapshot`` with truth-matched efficiency/fake-rate, an
 optional live HTTP endpoint (``--monitor-port``), and a JSON event
 display written through the shared ``event_display`` helper.
+
+``--buckets`` switches to the occupancy-bucketed path: one batch-packed
+executable per n_hits tier (``deploy_bucketed``), each event dispatched
+to the smallest bucket that fits its non-zero hit count, every bucket
+pre-compiled before traffic — see docs/architecture.md.
 """
 from __future__ import annotations
 
@@ -22,10 +27,26 @@ import numpy as np
 
 from repro.core import caloclusternet as ccn
 from repro.core.passes.parallelize import Requirements
-from repro.core.pipeline import deploy
+from repro.core.pipeline import deploy, deploy_bucketed
 from repro.data.belle2 import Belle2Config, current_detector, generate
 from repro.serving import (MonitorServer, ShardedTriggerService,
                            event_display, write_display)
+
+
+def _tune_and_rebind(cache, args, problems, redeploy):
+    """Autotune the given (graph, n_rows, batch, backend) problems,
+    persist winners, and redeploy with them bound; returns the fresh
+    deployment or None when nothing new was searched."""
+    from repro.tuning import autotune_graph
+    n_new = sum(autotune_graph(g, n_rows=nr, batch=bt, backend=be,
+                               cache=cache, verbose=True)
+                for g, nr, bt, be in problems)
+    print(f"[serve] autotuned {n_new} kernel problem(s), "
+          f"cache holds {len(cache)}")
+    if args.tuning_cache:
+        cache.save(args.tuning_cache)
+        print(f"[serve] tuning cache -> {args.tuning_cache}")
+    return redeploy() if n_new else None   # rebind fresh winners
 
 
 def main():
@@ -58,6 +79,16 @@ def main():
                          "device, device-placed when several exist)")
     ap.add_argument("--policy", default="round_robin",
                     choices=["round_robin", "least_loaded"])
+    ap.add_argument("--buckets", type=int, nargs="+", default=None,
+                    metavar="N_HITS",
+                    help="occupancy buckets (e.g. 8 16 32): deploy one "
+                         "batch-packed executable per bucket and "
+                         "dispatch each event to the smallest bucket "
+                         "that fits its non-zero hit count")
+    ap.add_argument("--bucket-microbatch", type=int, default=8,
+                    metavar="B",
+                    help="micro-batch width each bucket executable "
+                         "packs per launch (default 8)")
     ap.add_argument("--tuning-cache", default=None, metavar="PATH",
                     help="JSON kernel-tuning cache consulted when "
                          "binding kernels and warming replicas "
@@ -122,47 +153,68 @@ def main():
         if cache.load_error:
             print(f"[serve] WARNING: {cache.load_error}; "
                   "falling back to heuristic kernel defaults")
-    pipe = deploy(graph, req, calibration_feeds=feeds, tuning_cache=cache)
-    if args.tune:
-        from repro.tuning import autotune_graph
-        n_new = autotune_graph(pipe.graph, n_rows=cfg.n_hits,
-                               backend=pipe.backend, cache=cache,
-                               verbose=True)
-        print(f"[serve] autotuned {n_new} kernel problem(s), "
-              f"cache holds {len(cache)}")
-        if args.tuning_cache:
-            cache.save(args.tuning_cache)
-            print(f"[serve] tuning cache -> {args.tuning_cache}")
-        if n_new:   # rebind kernels with the fresh winners
-            pipe = deploy(graph, req, calibration_feeds=feeds,
-                          tuning_cache=cache)
-    print(f"[serve] deployed design ③{args.design_point} "
-          f"segments={len(pipe.segments)} P={pipe.par}")
-
-    def infer(batch):
-        return pipe({"hits": batch["hits"], "mask": batch["mask"]})
-
-    # warmup compile
-    warm = {"hits": calib["feats"][:pipe.microbatch],
-            "mask": calib["mask"][:pipe.microbatch]}
-    infer(warm)
-
-    warmup_fn = None
-    if cache is not None and len(cache):
-        from repro.tuning import make_warmup
-        warmup_fn = make_warmup(cache, backend=pipe.backend)
     monitoring = args.monitor_port is not None or args.event_display
-    eng = ShardedTriggerService(
-        infer, n_replicas=args.replicas,
-        microbatch=max(pipe.microbatch, 16), window_s=2e-3,
-        hedge_after_s=None, policy=args.policy, warmup_fn=warmup_fn,
-        monitor={"detector": gen_cfg,
-                 "display_n": max(args.event_display_n, 64)}
-        if monitoring else False)
-    if warmup_fn is not None:
-        print(f"[serve] replicas warmed "
-              f"{sum(r.warmed for r in eng.replicas)} cached kernel "
-              f"shape(s) at startup")
+    monitor_cfg = {"detector": gen_cfg,
+                   "display_n": max(args.event_display_n, 64)} \
+        if monitoring else False
+    if args.buckets:
+        mb = args.bucket_microbatch
+        bpipe = deploy_bucketed(graph, req, buckets=args.buckets,
+                                microbatch=mb, calibration_feeds=feeds,
+                                tuning_cache=cache)
+        if args.tune:
+            fresh = _tune_and_rebind(
+                cache, args,
+                [(p.graph, b, mb, p.backend)
+                 for b, p in bpipe.pipes.items()],
+                lambda: deploy_bucketed(
+                    graph, req, buckets=args.buckets, microbatch=mb,
+                    calibration_feeds=feeds, tuning_cache=cache))
+            if fresh is not None:
+                bpipe = fresh
+        print(f"[serve] deployed design ③{args.design_point} "
+              f"buckets={bpipe.buckets} microbatch={mb} "
+              f"(one batch-packed executable per bucket)")
+        eng = ShardedTriggerService(
+            buckets=bpipe, n_replicas=args.replicas, microbatch=mb,
+            window_s=2e-3, hedge_after_s=None, policy=args.policy,
+            monitor=monitor_cfg)
+        print(f"[serve] bucket executables pre-compiled at startup: "
+              f"{sum(r.warmed for r in eng.replicas)}")
+    else:
+        pipe = deploy(graph, req, calibration_feeds=feeds,
+                      tuning_cache=cache)
+        if args.tune:
+            fresh = _tune_and_rebind(
+                cache, args, [(pipe.graph, cfg.n_hits, 1, pipe.backend)],
+                lambda: deploy(graph, req, calibration_feeds=feeds,
+                               tuning_cache=cache))
+            if fresh is not None:
+                pipe = fresh
+        print(f"[serve] deployed design ③{args.design_point} "
+              f"segments={len(pipe.segments)} P={pipe.par}")
+
+        def infer(batch):
+            return pipe({"hits": batch["hits"], "mask": batch["mask"]})
+
+        # warmup compile
+        warm = {"hits": calib["feats"][:pipe.microbatch],
+                "mask": calib["mask"][:pipe.microbatch]}
+        infer(warm)
+
+        warmup_fn = None
+        if cache is not None and len(cache):
+            from repro.tuning import make_warmup
+            warmup_fn = make_warmup(cache, backend=pipe.backend)
+        eng = ShardedTriggerService(
+            infer, n_replicas=args.replicas,
+            microbatch=max(pipe.microbatch, 16), window_s=2e-3,
+            hedge_after_s=None, policy=args.policy, warmup_fn=warmup_fn,
+            monitor=monitor_cfg)
+        if warmup_fn is not None:
+            print(f"[serve] replicas warmed "
+                  f"{sum(r.warmed for r in eng.replicas)} cached kernel "
+                  f"shape(s) at startup")
     server = None
     if args.monitor_port is not None:
         server = MonitorServer.for_service(eng, port=args.monitor_port)
@@ -197,6 +249,11 @@ def main():
         print(f"[serve]   replica {rs['replica_id']}: "
               f"{rs['completed']} events, {rs['batches']} batches, "
               f"{rs['throughput_ev_s']:,.0f} ev/s")
+    if args.buckets:
+        for bs in eng.bucket_summary():
+            print(f"[serve]   bucket n_hits<={bs['bucket']}: "
+                  f"{bs['submitted']} events, {bs['batches']} batches, "
+                  f"{bs['padded_events']} padded")
     print(f"[serve] trigger efficiency={eff:.3f} fake rate={fake:.3f} "
           f"in-order=True")
     if monitoring:

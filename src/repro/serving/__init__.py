@@ -6,10 +6,11 @@ from repro.serving.monitor import (MonitorSnapshot, TriggerMonitor,
                                    write_display)
 from repro.serving.monitor_server import MonitorServer
 from repro.serving.replica import InOrderReleaser, ReplicaEngine
-from repro.serving.router import POLICIES, Router
+from repro.serving.router import (POLICIES, Router, event_occupancy,
+                                  pick_bucket)
 
 __all__ = ["AggregateStats", "InOrderReleaser", "MonitorServer",
            "MonitorSnapshot", "POLICIES", "ReplicaEngine", "Router",
            "ServingStats", "ShardedTriggerService", "TriggerMonitor",
            "TriggerServingEngine", "detector_grid", "event_display",
-           "write_display"]
+           "event_occupancy", "pick_bucket", "write_display"]

@@ -36,7 +36,8 @@ import numpy as np
 from repro.serving.monitor import MonitorSnapshot, TriggerMonitor
 from repro.serving.replica import (EventTiming, InOrderReleaser,
                                    ReplicaEngine, ServingStats)
-from repro.serving.router import POLICIES, Router
+from repro.serving.router import (POLICIES, Router, event_occupancy,
+                                  pick_bucket)
 
 __all__ = ["AggregateStats", "ServingStats", "ShardedTriggerService",
            "TriggerServingEngine", "POLICIES"]
@@ -163,28 +164,73 @@ class ShardedTriggerService:
     Read the fleet view with ``monitor_snapshot()`` /
     ``event_displays()``, and pass ``truth=`` to ``submit`` to get
     online truth-matched efficiency / fake-rate in the snapshot.
+
+    ``buckets``: occupancy-bucketed dispatch (paper-adjacent: size the
+    datapath to per-event occupancy instead of the detector maximum).
+    Pass a ``core.pipeline.BucketedPipeline`` (its per-bucket
+    batch-packed executables and warm-up are wired automatically) or a
+    ``{n_hits: infer_fn}`` dict. Each bucket gets its own group of
+    ``n_replicas`` replicas behind its own router; ``submit`` counts an
+    event's non-zero hits (``mask_feed``), slices its feeds to the
+    smallest bucket that fits (overflow falls back to the largest —
+    hits are energy-sorted upstream, so truncation sheds the softest
+    hits), and dispatches to that group. The shared in-order releaser
+    spans *all* groups, so global submission order survives bucketing.
     """
 
-    def __init__(self, infer_fn, *, n_replicas: int = 1, microbatch: int,
-                 window_s: float = 1e-3, queue_depth: int = 1024,
+    def __init__(self, infer_fn=None, *, n_replicas: int = 1,
+                 microbatch: int, window_s: float = 1e-3,
+                 queue_depth: int = 1024,
                  hedge_after_s: float | None = None,
                  policy: str = "round_robin", devices="auto",
-                 inflight: int = 2, warmup_fn=None, monitor=False):
+                 inflight: int = 2, warmup_fn=None, monitor=False,
+                 buckets=None, mask_feed: str = "mask"):
         if n_replicas < 1:
             raise ValueError("n_replicas must be >= 1")
-        infer_fns = infer_fn if isinstance(infer_fn, (list, tuple)) \
-            else [infer_fn] * n_replicas
-        if len(infer_fns) != n_replicas:
-            raise ValueError(
-                f"got {len(infer_fns)} infer_fns for {n_replicas} replicas")
+        self.mask_feed = mask_feed
+        bucket_warmups = None
+        if buckets is not None:
+            if infer_fn is not None:
+                raise ValueError(
+                    "pass either infer_fn or buckets=, not both — "
+                    "bucketed services route all traffic through the "
+                    "bucket executables")
+            if hasattr(buckets, "infer_fns"):     # BucketedPipeline
+                bucket_fns = buckets.infer_fns()
+                if warmup_fn is None and hasattr(buckets, "warmup_one"):
+                    # each bucket group warms ONLY its own executable
+                    # (once per distinct device), not the whole tier set
+                    bucket_warmups = {
+                        b: (lambda _b=b: buckets.warmup_one(_b))
+                        for b in bucket_fns}
+                elif warmup_fn is None and hasattr(buckets, "warmup"):
+                    warmup_fn = buckets.warmup
+            else:
+                bucket_fns = {int(b): fn for b, fn in dict(buckets).items()}
+            if not bucket_fns:
+                raise ValueError("buckets must name at least one bucket")
+            self.buckets = tuple(sorted(bucket_fns))
+            infer_fns = [bucket_fns[b]
+                         for b in self.buckets for _ in range(n_replicas)]
+        else:
+            if infer_fn is None:
+                raise ValueError(
+                    "infer_fn is required unless buckets= is given")
+            self.buckets = ()
+            infer_fns = infer_fn if isinstance(infer_fn, (list, tuple)) \
+                else [infer_fn] * n_replicas
+            if len(infer_fns) != n_replicas:
+                raise ValueError(f"got {len(infer_fns)} infer_fns for "
+                                 f"{n_replicas} replicas")
+        total = len(infer_fns)
         if devices == "auto":
             from repro.launch.mesh import replica_devices
-            devices = replica_devices(n_replicas)
+            devices = replica_devices(total)
         elif devices is None:
-            devices = [None] * n_replicas
-        if len(devices) != n_replicas:
+            devices = [None] * total
+        if len(devices) != total:
             raise ValueError(
-                f"got {len(devices)} devices for {n_replicas} replicas")
+                f"got {len(devices)} devices for {total} replicas")
 
         self.microbatch = microbatch
         self.window = window_s
@@ -195,17 +241,24 @@ class ShardedTriggerService:
         if monitor:
             mkw = dict(monitor) if isinstance(monitor, dict) else {}
             self.monitors = [TriggerMonitor(**mkw)
-                             for _ in range(n_replicas)]
+                             for _ in range(total)]
         else:
             self.monitors = []
         # seq -> truth bit for in-flight events (monitoring only);
         # written by submit, consumed by the replica batch loops.
         self._truth: dict[int, bool] = {}
+        if bucket_warmups is not None:
+            warmup_fns = [bucket_warmups[b]
+                          for b in self.buckets for _ in range(n_replicas)]
+        else:
+            warmup_fns = [warmup_fn] * total
         self.replicas = []
-        warmed_devices = set()
+        warmed = set()   # (device, warmup identity): jit caches are
+        #                  per-device, and bucket groups warm per-bucket
         for i, (fn, dev) in enumerate(zip(infer_fns, devices)):
-            wf = warmup_fn if dev not in warmed_devices else None
-            warmed_devices.add(dev)
+            key = (dev, id(warmup_fns[i]))
+            wf = warmup_fns[i] if key not in warmed else None
+            warmed.add(key)
             self.replicas.append(
                 ReplicaEngine(fn, self._releaser, microbatch=microbatch,
                               window_s=window_s, queue_depth=queue_depth,
@@ -216,26 +269,75 @@ class ShardedTriggerService:
                               if self.monitors else None,
                               truth_map=self._truth
                               if self.monitors else None))
-        self.router = Router(self.replicas, policy)
+        if self.buckets:
+            self._bucket_groups = {
+                b: self.replicas[gi * n_replicas:(gi + 1) * n_replicas]
+                for gi, b in enumerate(self.buckets)}
+            self._bucket_routers = {
+                b: Router(grp, policy)
+                for b, grp in self._bucket_groups.items()}
+            # per-bucket intake counters double as gap-free round-robin
+            # indices within each bucket's replica group.
+            self.bucket_counts = {b: 0 for b in self.buckets}
+            self.router = None
+        else:
+            self.router = Router(self.replicas, policy)
         self._agg = AggregateStats(self.replicas)
 
     # ------------------------------------------------------------ client ----
+    @staticmethod
+    def _cut_event(event: dict, n: int) -> dict:
+        """Slice (or zero-pad) every per-event feed's hit axis (axis 0)
+        to exactly ``n`` rows — the chosen bucket's launch shape."""
+        out = {}
+        for key, v in event.items():
+            v = np.asarray(v)
+            if v.shape[0] >= n:
+                out[key] = v[:n]
+            else:
+                pw = [(0, n - v.shape[0])] + [(0, 0)] * (v.ndim - 1)
+                out[key] = np.pad(v, pw)
+        return out
+
+    def classify(self, event: dict) -> int:
+        """The occupancy bucket this event would dispatch to."""
+        if not self.buckets:
+            raise RuntimeError("service is not occupancy-bucketed")
+        return pick_bucket(event_occupancy(event, self.mask_feed),
+                           self.buckets)
+
     def submit(self, event: dict, *, truth: bool | None = None) -> Future:
         """Shard the event to a replica; returns a Future that resolves
         in global submission order.  Blocks (backpressure) when the
         chosen replica's bounded queue is full.
 
+        With ``buckets``, the event is first classified by non-zero hit
+        count and its feeds cut to the bucket's launch shape; dispatch
+        then round-robins (or least-loads) within that bucket's replica
+        group. Ordering is still global across buckets.
+
         ``truth``: optional ground-truth trigger bit; with monitoring
         enabled it is matched against the model's decision on release,
         feeding the snapshot's online efficiency / fake-rate."""
         t_submit = time.perf_counter()
+        bucket = None
+        if self.buckets:
+            # classify outside the sequence lock (O(hits) numpy count)
+            bucket = pick_bucket(event_occupancy(event, self.mask_feed),
+                                 self.buckets)
+            event = self._cut_event(event, bucket)
         with self._seq_lock:
             seq = self._seq
             self._seq += 1
             self._agg.note_submission(t_submit)
             # pick under the lock so round-robin sees a gap-free seq
             # and least-loaded sees a consistent load snapshot.
-            replica = self.router.pick(seq)
+            if bucket is None:
+                replica = self.router.pick(seq)
+            else:
+                idx = self.bucket_counts[bucket]
+                self.bucket_counts[bucket] = idx + 1
+                replica = self._bucket_routers[bucket].pick(idx)
         if truth is not None and self.monitors:
             self._truth[seq] = bool(truth)   # before enqueue: release
             #                      can only happen after the enqueue.
@@ -281,6 +383,21 @@ class ShardedTriggerService:
         recs = [r for m in self.monitors for r in m.displays()]
         recs.sort(key=lambda r: r["event"])
         return recs if n is None else recs[-n:]
+
+    def bucket_summary(self) -> list[dict]:
+        """Per-bucket intake/completion view (empty when unbucketed)."""
+        out = []
+        for b in self.buckets:
+            grp = self._bucket_groups[b]
+            out.append({
+                "bucket": b,
+                "replicas": len(grp),
+                "submitted": self.bucket_counts[b],
+                "completed": sum(r.stats.completed for r in grp),
+                "batches": sum(r.stats.batches for r in grp),
+                "padded_events": sum(r.stats.padded_events for r in grp),
+            })
+        return out
 
     # ----------------------------------------------------------- control ----
     @property

@@ -8,10 +8,41 @@ Two policies, both O(1) per event:
                  but-unreleased events (ties break by replica index),
                  which absorbs skew when one replica hedges or runs on
                  a slower device.
+
+Occupancy bucketing: with a bucketed deployment (one batch-packed
+executable per n_hits tier — see ``core.pipeline.deploy_bucketed``)
+the service classifies each event by its non-zero hit count
+(``event_occupancy``) and dispatches to the replica group serving the
+smallest bucket that fits (``pick_bucket``); events overflowing the
+largest bucket fall back to it (hits are energy-sorted upstream, so
+truncation drops the softest hits first). Classification is O(hits)
+numpy on the submit path — no jax, no copies.
 """
 from __future__ import annotations
 
+import numpy as np
+
 POLICIES = ("round_robin", "least_loaded")
+
+
+def pick_bucket(occupancy: int, buckets) -> int:
+    """Smallest bucket >= ``occupancy``; overflow → largest bucket.
+
+    ``buckets`` must be a non-empty iterable of positive ints; a 0-hit
+    event lands in the smallest bucket (a real launch shape — padding
+    handles it like the paper's zero-padded missing inputs)."""
+    bs = sorted(buckets)
+    if not bs:
+        raise ValueError("pick_bucket: no buckets")
+    for b in bs:
+        if occupancy <= b:
+            return b
+    return bs[-1]
+
+
+def event_occupancy(event: dict, mask_feed: str = "mask") -> int:
+    """Non-zero hit count of one (un-batched) event dict."""
+    return int(np.count_nonzero(np.asarray(event[mask_feed]) > 0))
 
 
 class Router:

@@ -124,27 +124,41 @@ def tune_fused_dense(rows: int, d_in: int, d_out: int, *,
 
 # ---------------------------------------------------------------- gravnet ----
 def tune_gravnet(n: int, d_s: int, d_f: int, k: int, *,
-                 dtype: str = "float32", backend: str = "xla",
-                 cache: TuningCache | None = None, iters: int = 5,
-                 min_gain: float = MIN_GAIN, seed: int = 0) -> dict:
+                 batch: int = 1, dtype: str = "float32",
+                 backend: str = "xla", cache: TuningCache | None = None,
+                 iters: int = 5, min_gain: float = MIN_GAIN,
+                 seed: int = 0) -> dict:
+    """``batch > 1`` tunes the *batched* kernel (leading event grid
+    dimension) at the (batch, n) shape a bucketed deployment actually
+    launches; batch=1 keeps the legacy per-event problem/key."""
     import jax.numpy as jnp
 
     from repro.kernels import ops
     rng = np.random.default_rng(seed)
     dt = _np_dtype(dtype)
-    s = jnp.asarray(rng.normal(size=(n, d_s)), dt)
-    f = jnp.asarray(rng.normal(size=(n, d_f)), dt)
-    mask = jnp.asarray(rng.uniform(size=(n,)) < 0.8, jnp.float32)
+    if batch > 1:
+        s = jnp.asarray(rng.normal(size=(batch, n, d_s)), dt)
+        f = jnp.asarray(rng.normal(size=(batch, n, d_f)), dt)
+        mask = jnp.asarray(rng.uniform(size=(batch, n)) < 0.8, jnp.float32)
 
-    def call(cfg):
-        return ops.gravnet_aggregate(s, f, mask, k=k, backend=backend, **cfg)
+        def call(cfg):
+            return ops.gravnet_aggregate_batched(s, f, mask, k=k,
+                                                 backend=backend, **cfg)
+    else:
+        s = jnp.asarray(rng.normal(size=(n, d_s)), dt)
+        f = jnp.asarray(rng.normal(size=(n, d_f)), dt)
+        mask = jnp.asarray(rng.uniform(size=(n,)) < 0.8, jnp.float32)
 
-    cands = cand.gravnet_candidates(n)
+        def call(cfg):
+            return ops.gravnet_aggregate(s, f, mask, k=k, backend=backend,
+                                         **cfg)
+
+    cands = cand.gravnet_candidates(n, batch=batch)
     if backend in _KNOB_INERT_BACKENDS:
         cands = cands[:1]
     timed = [(cfg, _time_call(lambda c=cfg: call(c), iters=iters))
              for cfg in cands]
-    key = gravnet_key(n, d_s, d_f, k, dtype, backend)
+    key = gravnet_key(n, d_s, d_f, k, dtype, backend, batch=batch)
     return _finish(cache, key, timed, min_gain=min_gain)
 
 
@@ -177,21 +191,25 @@ def tune_flash_attention(bh: int, s: int, t: int, d: int, *,
 
 
 # ------------------------------------------------------------ graph walk ----
-def graph_kernel_problems(g, *, n_rows: int, backend: str) -> list[KernelKey]:
+def graph_kernel_problems(g, *, n_rows: int, backend: str,
+                          batch: int = 1) -> list[KernelKey]:
     """The tuning problems a deploy-optimized graph emits, derived with
-    the same shape rules ``kernel_opt`` uses when binding kernels."""
+    the same shape rules ``kernel_opt`` uses when binding kernels.
+    ``batch`` is the packed micro-batch width of a bucketed executable
+    (1 = legacy per-event shapes)."""
     from repro.core.passes.kernel_opt import (fused_dense_dtype,
                                               fused_dense_shape)
     problems: list[KernelKey] = []
     seen: set[KernelKey] = set()
     for op in g:
         if op.template == "fused_dense":
-            rows, d_in, d_out = fused_dense_shape(op, n_rows)
+            rows, d_in, d_out = fused_dense_shape(op, n_rows, batch)
             key = fused_dense_key(rows, d_in, d_out, fused_dense_dtype(op),
                                   backend)
         elif op.op_type == "gravnet_aggregate":
             key = gravnet_key(n_rows, op.attrs["d_s"], op.attrs["d_f"],
-                              op.attrs["k"], "float32", backend)
+                              op.attrs["k"], "float32", backend,
+                              batch=batch)
         else:
             continue
         if key not in seen:
@@ -201,12 +219,14 @@ def graph_kernel_problems(g, *, n_rows: int, backend: str) -> list[KernelKey]:
 
 
 def autotune_graph(g, *, n_rows: int, backend: str, cache: TuningCache,
-                   iters: int = 5, min_gain: float = MIN_GAIN,
-                   force: bool = False, verbose: bool = False) -> int:
+                   batch: int = 1, iters: int = 5,
+                   min_gain: float = MIN_GAIN, force: bool = False,
+                   verbose: bool = False) -> int:
     """Tune every kernel problem in ``g``; returns how many were
     (re)searched. Existing cache entries are kept unless ``force``."""
     tuned = 0
-    for key in graph_kernel_problems(g, n_rows=n_rows, backend=backend):
+    for key in graph_kernel_problems(g, n_rows=n_rows, backend=backend,
+                                     batch=batch):
         if not force and key in cache:
             continue
         if key.kernel == "fused_dense":
@@ -215,9 +235,12 @@ def autotune_graph(g, *, n_rows: int, backend: str, cache: TuningCache,
                              backend=backend, cache=cache, iters=iters,
                              min_gain=min_gain)
         elif key.kernel == "gravnet":
-            n, d_s, d_f, k = key.shape
-            tune_gravnet(n, d_s, d_f, k, dtype=key.dtype, backend=backend,
-                         cache=cache, iters=iters, min_gain=min_gain)
+            shape = key.shape
+            kb = shape[0] if len(shape) == 5 else 1
+            n, d_s, d_f, k = shape[-4:]
+            tune_gravnet(n, d_s, d_f, k, batch=kb, dtype=key.dtype,
+                         backend=backend, cache=cache, iters=iters,
+                         min_gain=min_gain)
         else:
             continue
         tuned += 1

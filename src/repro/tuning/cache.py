@@ -57,11 +57,21 @@ class KernelKey:
 
 def fused_dense_key(rows: int, d_in: int, d_out: int, dtype: str,
                     backend: str) -> KernelKey:
+    """Dense kernels row-pack micro-batches, so the batch/bucket
+    dimensions fold into ``rows``: a batch-packed bucket executable
+    keys with rows = microbatch × bucket_n_hits (see
+    ``kernel_opt.fused_dense_shape``)."""
     return KernelKey("fused_dense", (rows, d_in, d_out), dtype, backend)
 
 
 def gravnet_key(n: int, d_s: int, d_f: int, k: int, dtype: str,
-                backend: str) -> KernelKey:
+                backend: str, batch: int = 1) -> KernelKey:
+    """``n`` is the per-event graph size (= the occupancy bucket);
+    ``batch`` the packed micro-batch width of the batched kernel's
+    leading event grid dimension. ``batch=1`` keeps the legacy 4-dim
+    shape so existing caches and per-event lookups stay hits."""
+    if batch > 1:
+        return KernelKey("gravnet", (batch, n, d_s, d_f, k), dtype, backend)
     return KernelKey("gravnet", (n, d_s, d_f, k), dtype, backend)
 
 

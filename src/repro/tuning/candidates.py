@@ -87,12 +87,16 @@ def fused_dense_int8_candidates(rows: int, d_in: int, d_out: int,
     return _dedup_keep_order(cands)[:max_candidates]
 
 
-def default_gravnet(n: int) -> dict:
+def default_gravnet(n: int, batch: int = 1) -> dict:
+    """The row-tile heuristic is per-event, so it is batch-invariant:
+    the batched kernel's leading event grid dimension changes how many
+    cells launch, not the cell's block shape."""
     return {"bm": min(n, 128)}
 
 
-def gravnet_candidates(n: int, *, max_candidates: int = 8) -> list[dict]:
-    cands = [default_gravnet(n)]
+def gravnet_candidates(n: int, *, batch: int = 1,
+                       max_candidates: int = 8) -> list[dict]:
+    cands = [default_gravnet(n, batch)]
     for bm in _pow2_range(8, 512):
         if n % bm == 0:        # the kernel asserts n % bm == 0
             cands.append({"bm": bm})

@@ -47,12 +47,20 @@ def _replay(key, config) -> None:
             b = jnp.asarray(rng.normal(size=(d_out,)), dt)
             out = ops.fused_dense(x, w, b, backend=backend, **config)
     elif key.kernel == "gravnet":
-        n, d_s, d_f, k = key.shape
-        s = jnp.asarray(rng.normal(size=(n, d_s)), jnp.float32)
-        f = jnp.asarray(rng.normal(size=(n, d_f)), jnp.float32)
-        mask = jnp.ones((n,), jnp.float32)
-        out = ops.gravnet_aggregate(s, f, mask, k=k, backend=backend,
-                                    **config)
+        if len(key.shape) == 5:    # batched problem: (batch, n, ds, df, k)
+            batch, n, d_s, d_f, k = key.shape
+            s = jnp.asarray(rng.normal(size=(batch, n, d_s)), jnp.float32)
+            f = jnp.asarray(rng.normal(size=(batch, n, d_f)), jnp.float32)
+            mask = jnp.ones((batch, n), jnp.float32)
+            out = ops.gravnet_aggregate_batched(s, f, mask, k=k,
+                                                backend=backend, **config)
+        else:
+            n, d_s, d_f, k = key.shape
+            s = jnp.asarray(rng.normal(size=(n, d_s)), jnp.float32)
+            f = jnp.asarray(rng.normal(size=(n, d_f)), jnp.float32)
+            mask = jnp.ones((n,), jnp.float32)
+            out = ops.gravnet_aggregate(s, f, mask, k=k, backend=backend,
+                                        **config)
     elif key.kernel == "flash_attention":
         bh, s, t, d = key.shape
         q = jnp.asarray(rng.normal(size=(bh, s, d)), jnp.float32)

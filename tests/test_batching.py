@@ -1,0 +1,282 @@
+"""Occupancy-bucketed, batch-packed inference path.
+
+Covers the invariants docs/architecture.md promises:
+
+- the batched kernels (leading event grid dimension) are bitwise-equal
+  in f32 to a loop of per-event launches;
+- bucket classification edge cases: 0-hit event, event exactly on a
+  bucket boundary, event overflowing the largest bucket;
+- a bucketed deployment reproduces the single-pipeline CPS decisions;
+- the bucketed serving service dispatches per occupancy, keeps global
+  order, and pre-compiles every bucket before traffic;
+- the Belle II occupancy knob actually spreads events over buckets;
+- tuning keys/warm-up carry the batch/bucket dimensions.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import caloclusternet as ccn
+from repro.core.passes.parallelize import Requirements
+from repro.core.pipeline import deploy, deploy_bucketed
+from repro.data.belle2 import current_detector, generate, with_occupancy
+from repro.kernels import ops
+from repro.serving import ShardedTriggerService, event_occupancy, pick_bucket
+
+
+# ------------------------------------------------- kernel equivalence ----
+@pytest.mark.parametrize("b,n,bm", [(4, 32, 16), (3, 24, 8), (8, 16, 16)])
+def test_gravnet_batched_bitwise_matches_per_event(b, n, bm):
+    rng = np.random.default_rng(b * 100 + n)
+    s = jnp.asarray(rng.normal(size=(b, n, 4)), jnp.float32)
+    f = jnp.asarray(rng.normal(size=(b, n, 22)), jnp.float32)
+    mask = jnp.asarray(rng.uniform(size=(b, n)) < 0.7, jnp.float32)
+    batched = ops.gravnet_aggregate_batched(
+        s, f, mask, k=6, bm=bm, backend="pallas_interpret")
+    looped = jnp.stack([
+        ops.gravnet_aggregate(s[i], f[i], mask[i], k=6, bm=bm,
+                              backend="pallas_interpret")
+        for i in range(b)])
+    assert bool(jnp.all(batched == looped))   # bitwise, f32
+
+
+def test_gravnet_batched_zero_hit_event_in_batch():
+    """A fully-masked event inside a batch must aggregate to zeros
+    without contaminating its neighbors."""
+    rng = np.random.default_rng(0)
+    s = jnp.asarray(rng.normal(size=(3, 16, 4)), jnp.float32)
+    f = jnp.asarray(rng.normal(size=(3, 16, 8)), jnp.float32)
+    mask = jnp.asarray(rng.uniform(size=(3, 16)) < 0.8, jnp.float32)
+    mask = mask.at[1].set(0.0)
+    out = ops.gravnet_aggregate_batched(s, f, mask, k=4, bm=16,
+                                        backend="pallas_interpret")
+    assert bool(jnp.all(out[1] == 0.0))
+    solo = ops.gravnet_aggregate(s[0], f[0], mask[0], k=4, bm=16,
+                                 backend="pallas_interpret")
+    assert bool(jnp.all(out[0] == solo))
+
+
+@pytest.mark.parametrize("variant", ["flattened", "looped"])
+def test_fused_dense_batched_bitwise_matches_per_event(variant):
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.normal(size=(4, 32, 24)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(24, 40)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(40,)), jnp.float32)
+    kw = dict(bm=16, bn=128, bk=128) if variant == "looped" else {}
+    batched = ops.fused_dense_batched(x, w, b, variant=variant,
+                                      backend="pallas_interpret", **kw)
+    looped = jnp.stack([
+        ops.fused_dense(x[i], w, b, variant=variant,
+                        backend="pallas_interpret", **kw)
+        for i in range(4)])
+    assert bool(jnp.all(batched == looped))   # bitwise, f32
+    want = np.maximum(np.einsum("bmk,kn->bmn", np.asarray(x),
+                                np.asarray(w)) + np.asarray(b), 0.0)
+    np.testing.assert_allclose(np.asarray(batched), want, rtol=1e-5,
+                               atol=1e-5)
+
+
+# ------------------------------------------------- bucket classification ----
+def test_pick_bucket_edges():
+    buckets = (8, 16, 32)
+    assert pick_bucket(0, buckets) == 8          # 0-hit event
+    assert pick_bucket(7, buckets) == 8
+    assert pick_bucket(8, buckets) == 8          # exactly on boundary
+    assert pick_bucket(9, buckets) == 16
+    assert pick_bucket(16, buckets) == 16        # boundary again
+    assert pick_bucket(32, buckets) == 32
+    assert pick_bucket(33, buckets) == 32        # overflow -> largest
+    assert pick_bucket(10_000, buckets) == 32
+    with pytest.raises(ValueError):
+        pick_bucket(1, ())
+
+
+def test_event_occupancy_counts_nonzero_mask():
+    ev = {"hits": np.zeros((32, 4), np.float32),
+          "mask": np.concatenate([np.ones(5), np.zeros(27)]
+                                 ).astype(np.float32)}
+    assert event_occupancy(ev) == 5
+    ev["mask"][:] = 0
+    assert event_occupancy(ev) == 0
+
+
+# ------------------------------------------------- bucketed deployment ----
+@pytest.fixture(scope="module")
+def trigger_setup():
+    cfg = ccn.current_detector_config()
+    gen = current_detector()
+    params = ccn.init(jax.random.PRNGKey(0), cfg)
+    graph = ccn.to_graph(params, cfg)
+    req = Requirements(design_point=3, platform="cpu",
+                       precision_policy="fp", n_hits=cfg.n_hits,
+                       target_throughput=2e4, max_latency_s=2e-3)
+    events = generate(with_occupancy(gen, (4, 8, 16, 32)), 24, seed=11)
+    feeds = {"hits": events["feats"], "mask": events["mask"]}
+    return cfg, gen, graph, req, events, feeds
+
+
+def test_bucketed_pipeline_matches_single(trigger_setup):
+    cfg, gen, graph, req, events, feeds = trigger_setup
+    single = deploy(graph, req)
+    bucketed = deploy_bucketed(graph, req, buckets=(8, 16, 32),
+                               microbatch=4, calibration_feeds=feeds)
+    out_s = single(feeds)
+    out_b = bucketed(feeds)
+    for key in ("trigger", "n_clusters"):
+        assert (np.asarray(out_b["cps"][key])
+                == np.asarray(out_s["cps"][key])).all()
+    np.testing.assert_allclose(np.asarray(out_b["cps"]["cluster_e"]),
+                               np.asarray(out_s["cps"]["cluster_e"]),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_bucketed_pipeline_zero_hit_and_overflow(trigger_setup):
+    cfg, gen, graph, req, events, feeds = trigger_setup
+    bucketed = deploy_bucketed(graph, req, buckets=(8, 16),
+                               microbatch=2, calibration_feeds=feeds)
+    # 0-hit event -> smallest bucket; full 32-hit event overflows the
+    # largest bucket (16) and must still produce a decision
+    hits = np.asarray(feeds["hits"][:2]).copy()
+    mask = np.asarray(feeds["mask"][:2]).copy()
+    hits[0], mask[0] = 0.0, 0.0          # 0 hits
+    mask[1] = 1.0                        # 32 nonzero hits > largest bucket
+    assert bucketed.classify(0) == 8
+    assert bucketed.classify(32) == 16
+    out = bucketed({"hits": hits, "mask": mask})
+    trig = np.asarray(out["cps"]["trigger"])
+    assert trig.shape == (2,)
+    assert not bool(trig[0])             # nothing to trigger on
+    # overflow event matches the largest-bucket executable run directly
+    direct = bucketed.pipes[16]({"hits": jnp.asarray(hits[1:2, :16]),
+                                 "mask": jnp.asarray(mask[1:2, :16])})
+    assert bool(trig[1]) == bool(np.asarray(direct["cps"]["trigger"])[0])
+
+
+def test_bucketed_pipeline_warmup_counts_buckets(trigger_setup):
+    cfg, gen, graph, req, events, feeds = trigger_setup
+    bucketed = deploy_bucketed(graph, req, buckets=(8, 32), microbatch=2,
+                               calibration_feeds=feeds)
+    assert bucketed.warmup() == 2
+
+
+# --------------------------------------------------- bucketed serving ----
+def test_bucketed_service_dispatch_and_order(trigger_setup):
+    cfg, gen, graph, req, events, feeds = trigger_setup
+    bucketed = deploy_bucketed(graph, req, buckets=(8, 16, 32),
+                               microbatch=4, calibration_feeds=feeds)
+    svc = ShardedTriggerService(buckets=bucketed, n_replicas=1,
+                                microbatch=4, window_s=5e-3, devices=None)
+    try:
+        # every bucket executable pre-compiled before traffic
+        assert sum(r.warmed for r in svc.replicas) == 3
+        n = feeds["hits"].shape[0]
+        futs = [svc.submit({"hits": np.asarray(feeds["hits"][i]),
+                            "mask": np.asarray(feeds["mask"][i])})
+                for i in range(n)]
+        res = [f.result(timeout=60) for f in futs]
+        svc.drain()
+        want = np.asarray(bucketed(feeds)["cps"]["trigger"])
+        got = np.asarray([bool(r["cps"]["trigger"]) for r in res])
+        assert (got == want).all()       # in-order AND bucket-correct
+        summ = svc.bucket_summary()
+        assert [s["bucket"] for s in summ] == [8, 16, 32]
+        assert sum(s["submitted"] for s in summ) == n
+        assert all(s["completed"] == s["submitted"] for s in summ)
+        occ = np.count_nonzero(np.asarray(feeds["mask"]) > 0, axis=1)
+        for s in summ:
+            expect = sum(1 for o in occ
+                         if pick_bucket(int(o), (8, 16, 32)) == s["bucket"])
+            assert s["submitted"] == expect
+    finally:
+        svc.close()
+
+
+def test_bucketed_service_rejects_empty_and_classify_guard():
+    with pytest.raises(ValueError):
+        ShardedTriggerService(buckets={}, microbatch=2)
+    with pytest.raises(ValueError):   # conflicting arguments
+        ShardedTriggerService(lambda f: f, buckets={8: lambda f: f},
+                              microbatch=2)
+    with pytest.raises(ValueError):   # neither argument
+        ShardedTriggerService(microbatch=2)
+    svc = ShardedTriggerService(lambda feeds: feeds, microbatch=2,
+                                devices=None)
+    try:
+        with pytest.raises(RuntimeError):
+            svc.classify({"mask": np.ones(4, np.float32)})
+    finally:
+        svc.close()
+
+
+# ----------------------------------------------------- occupancy knob ----
+def test_belle2_occupancy_knob_spreads_buckets():
+    gen = with_occupancy(current_detector(), (4, 8, 16, 32),
+                         (0.4, 0.3, 0.2, 0.1))
+    ev = generate(gen, 96, seed=3)
+    occ = np.count_nonzero(ev["mask"] > 0, axis=1)
+    assert occ.max() <= 32
+    buckets = {pick_bucket(int(o), (4, 8, 16, 32)) for o in occ}
+    assert len(buckets) >= 3             # real spread, not one tier
+    # deterministic per seed
+    ev2 = generate(gen, 96, seed=3)
+    assert (ev["feats"] == ev2["feats"]).all()
+
+
+def test_belle2_occupancy_default_unchanged():
+    gen = current_detector()
+    a = generate(gen, 8, seed=5)
+    b = generate(dataclasses.replace(gen, occupancy=None), 8, seed=5)
+    assert (a["feats"] == b["feats"]).all()
+
+
+def test_belle2_occupancy_invalid_profile_raises():
+    gen = dataclasses.replace(current_detector(), occupancy=((8, -1.0),))
+    with pytest.raises(ValueError):
+        generate(gen, 2, seed=0)
+
+
+# ---------------------------------------------------- tuning batch keys ----
+def test_gravnet_key_batch_dimension():
+    from repro.tuning import gravnet_key
+    k1 = gravnet_key(32, 4, 22, 8, "float32", "xla")
+    kb = gravnet_key(32, 4, 22, 8, "float32", "xla", batch=8)
+    assert k1.shape == (32, 4, 22, 8)          # legacy shape preserved
+    assert kb.shape == (8, 32, 4, 22, 8)
+    assert k1 != kb
+    from repro.tuning.cache import KernelKey
+    assert KernelKey.decode(kb.encode()) == kb
+
+
+def test_kernel_opt_batch_folds_into_dense_rows(trigger_setup):
+    cfg, gen, graph, req, events, feeds = trigger_setup
+    from repro.core.passes.kernel_opt import fused_dense_shape
+    from repro.tuning import graph_kernel_problems
+    pipe = deploy(graph, req, batch=8)
+    for op in pipe.graph:
+        if op.template == "fused_dense":
+            rows, _, _ = fused_dense_shape(op, cfg.n_hits, 8)
+            assert rows == 8 * cfg.n_hits
+    keys = graph_kernel_problems(pipe.graph, n_rows=cfg.n_hits,
+                                 backend="xla", batch=8)
+    gk = [k for k in keys if k.kernel == "gravnet"]
+    assert gk and all(k.shape[0] == 8 for k in gk)
+
+
+def test_warmup_replays_batched_gravnet_key():
+    from repro.tuning import TuningCache, gravnet_key, warm_from_cache
+    cache = TuningCache()
+    cache.put(gravnet_key(16, 4, 6, 4, "float32", "xla", batch=3),
+              {"bm": 16})
+    assert warm_from_cache(cache, backend="xla") == 1
+
+
+def test_tune_gravnet_batched_records_batched_key(tmp_path):
+    from repro.tuning import TuningCache, gravnet_key, tune_gravnet
+    cache = TuningCache(tmp_path / "c.json")
+    cfg = tune_gravnet(16, 4, 6, 4, batch=3, backend="xla", cache=cache,
+                       iters=1)
+    assert "bm" in cfg
+    assert gravnet_key(16, 4, 6, 4, "float32", "xla", batch=3) in cache

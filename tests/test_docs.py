@@ -1,0 +1,48 @@
+"""Docs link integrity: the CI docs job runs ``tools/check_docs.py``;
+this keeps the same invariant enforceable locally via tier-1."""
+import importlib.util
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def _load_checker():
+    spec = importlib.util.spec_from_file_location(
+        "check_docs", REPO / "tools" / "check_docs.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_github_slugification():
+    m = _load_checker()
+    assert m.github_slug("Autotuning & performance gates") \
+        == "autotuning--performance-gates"
+    assert m.github_slug("The design flow: from model to deployed "
+                         "pipeline") \
+        == "the-design-flow-from-model-to-deployed-pipeline"
+    assert m.github_slug("Reading `ServingStats.summary()`") \
+        == "reading-servingstatssummary"
+
+
+def test_anchor_extraction_skips_code_fences():
+    m = _load_checker()
+    text = "# Real\n```\n# not a heading\n```\n## Also Real\n"
+    assert m.anchors_of(text) == {"real", "also-real"}
+
+
+def test_repo_docs_links_resolve(capsys):
+    m = _load_checker()
+    rc = m.main()
+    out = capsys.readouterr()
+    assert rc == 0, f"broken docs links:\n{out.err}"
+
+
+def test_checker_flags_broken_links(tmp_path, monkeypatch):
+    m = _load_checker()
+    (tmp_path / "docs").mkdir()
+    (tmp_path / "README.md").write_text(
+        "# T\n[gone](docs/missing.md) [bad](#no-such-anchor)\n")
+    monkeypatch.setattr(m, "REPO", tmp_path)
+    monkeypatch.setattr(m, "DOC_FILES", ["README.md"])
+    assert m.main() == 1

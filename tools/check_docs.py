@@ -1,0 +1,113 @@
+"""Docs link checker: internal anchors + relative paths must resolve.
+
+Scans ``README.md`` and ``docs/*.md`` for markdown links and verifies
+
+  - relative file targets exist (resolved against the linking file);
+  - ``#anchor`` fragments (same-file or cross-file) match a real
+    heading under GitHub's slugification rules;
+  - http(s) targets are *not* fetched (CI must not flake on the
+    network) — only counted.
+
+Exit nonzero listing every broken link, so documented paths cannot
+rot silently. Run directly or via the CI ``docs`` job:
+
+    python tools/check_docs.py
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+DOC_FILES = ["README.md", *sorted(p.relative_to(REPO).as_posix()
+                                  for p in (REPO / "docs").glob("*.md"))]
+
+# [text](target) — ignore images' leading ! (targets checked the same)
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_HEADING = re.compile(r"^#{1,6}\s+(.*)$", re.M)
+# fenced code blocks must not contribute links or headings
+_FENCE = re.compile(r"```.*?```", re.S)
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor slug: lowercase; drop everything that is not a
+    word character, space, or hyphen; spaces become hyphens."""
+    h = heading.strip().lower()
+    h = re.sub(r"[`*_]", "", h)               # inline formatting
+    h = re.sub(r"[^\w\- ]", "", h)
+    return h.replace(" ", "-")
+
+
+def anchors_of(text: str) -> set[str]:
+    out: set[str] = set()
+    seen: dict[str, int] = {}
+    for m in _HEADING.finditer(_FENCE.sub("", text)):
+        slug = github_slug(m.group(1))
+        n = seen.get(slug, 0)
+        seen[slug] = n + 1
+        out.add(slug if n == 0 else f"{slug}-{n}")
+    return out
+
+
+def check_file(rel: str, cache: dict[str, set[str]]) -> list[str]:
+    path = REPO / rel
+    text = path.read_text(encoding="utf-8")
+    cache.setdefault(rel, anchors_of(text))
+    problems = []
+    for m in _LINK.finditer(_FENCE.sub("", text)):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        if target.startswith("../../"):
+            continue   # repo-external (e.g. the Actions badge route)
+        frag = None
+        if "#" in target:
+            target, frag = target.split("#", 1)
+        if target:
+            dest = (path.parent / target).resolve()
+            if not dest.exists():
+                problems.append(f"{rel}: broken path link -> {m.group(1)}")
+                continue
+            try:
+                dest_rel = dest.relative_to(REPO).as_posix()
+            except ValueError:
+                problems.append(f"{rel}: link escapes repo -> {m.group(1)}")
+                continue
+        else:
+            dest, dest_rel = path, rel
+        if frag is not None:
+            if dest.suffix.lower() not in (".md", ".markdown"):
+                continue
+            if dest_rel not in cache:
+                cache[dest_rel] = anchors_of(
+                    dest.read_text(encoding="utf-8"))
+            if frag.lower() not in cache[dest_rel]:
+                problems.append(
+                    f"{rel}: broken anchor -> {m.group(1)} "
+                    f"(no heading slug {frag!r} in {dest_rel})")
+    return problems
+
+
+def main() -> int:
+    cache: dict[str, set[str]] = {}
+    problems = []
+    checked = 0
+    for rel in DOC_FILES:
+        if not (REPO / rel).exists():
+            problems.append(f"missing doc file: {rel}")
+            continue
+        problems += check_file(rel, cache)
+        checked += 1
+    print(f"[check_docs] checked {checked} file(s): "
+          f"{', '.join(DOC_FILES)}")
+    if problems:
+        for p in problems:
+            print(f"[check_docs] {p}", file=sys.stderr)
+        return 1
+    print("[check_docs] all internal links and anchors resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
