@@ -1,0 +1,231 @@
+"""GravNet-block fusion benchmark: fused megakernel vs the unfused
+dense→aggregate→dense chain, across occupancy buckets × micro-batches.
+
+Two measurements per (bucket, microbatch) point:
+
+  block_*  — the GravNet-block operator chain at *launch granularity*:
+             every kernel wrapper call is its own dispatch, exactly as
+             each ``pallas_call`` is its own launch on TPU hardware.
+             Unfused = 3 launches (S/F projection dense, aggregate,
+             output dense); fused = 1 megakernel launch. This is the
+             quantity the megakernel changes and the one the ``--check``
+             gate enforces (fused ≥ 1.2× unfused events/s at
+             micro-batch ≥ 8).
+  pipe_*   — the full deployed pipeline (whole-pipeline jit), fused vs
+             ``deploy(fuse_gravnet_block=False)``. On CPU the XLA
+             whole-program jit already hides launch boundaries, so this
+             mostly guards against end-to-end regressions; the real
+             end-to-end gate is ``serving_scaling.py`` vs
+             ``BENCH_baseline.json``.
+
+Per-deployment launch counts (kernel-launching operators per event)
+are derived from the deployed graphs and recorded alongside: the CCN
+GravNet block goes 3 → 1 launches per block.
+
+    PYTHONPATH=src python benchmarks/fusion.py --out BENCH_fusion.json
+    PYTHONPATH=src python -m benchmarks.run fusion
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+
+if __package__ in (None, ""):   # script invocation: put repo root first
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+
+from benchmarks.common import row
+
+BUCKETS = (8, 16, 32)
+MICROBATCHES = (1, 8, 16)
+
+
+def _time_ab(fn_a, fn_b, *, warmup: int = 2, iters: int = 7):
+    """Interleaved min-of-N A/B timing. Alternating single-call samples
+    cancel machine-load drift between the two sides, and the minimum is
+    the least-noisy estimator of intrinsic cost (scheduler noise on a
+    busy host is strictly additive — same rationale as
+    ``tuning.autotune._time_call`` and ``regression.py``)."""
+    import time
+
+    import jax
+    for _ in range(warmup):
+        jax.block_until_ready(fn_a())
+        jax.block_until_ready(fn_b())
+    ta, tb = [], []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn_a())
+        ta.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn_b())
+        tb.append(time.perf_counter() - t0)
+    return min(ta), min(tb)
+
+# operators that launch a kernel (one dispatch each on the Pallas path)
+_KERNEL_OPS = ("dense", "linear", "gravnet_aggregate", "gravnet_block",
+               "attention")
+
+
+def launch_counts(graph) -> dict:
+    """Kernel launches per micro-batch step, total and per GravNet
+    block (the paper's fusion story in one number: 3 → 1)."""
+    total = sum(1 for op in graph if op.op_type in _KERNEL_OPS)
+    per_block_unfused = [
+        op for op in graph
+        if op.op_type in ("gravnet_aggregate", "gravnet_block")]
+    n_blocks = len(per_block_unfused)
+    block_launches = 0
+    for op in per_block_unfused:
+        if op.op_type == "gravnet_block":
+            block_launches += 1
+        else:
+            # the aggregate plus its projection + output denses
+            block_launches += 3
+    return {"total": total, "gravnet_blocks": n_blocks,
+            "per_block": (block_launches / n_blocks) if n_blocks else 0}
+
+
+def run(out_path: str | None = None, iters: int = 5):
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    import repro.core.caloclusternet as ccn
+    from repro.core.passes.parallelize import Requirements
+    from repro.core.pipeline import _cut_hits, deploy
+    from repro.data.belle2 import current_detector, generate
+    from repro.kernels import ops
+
+    cfg = ccn.current_detector_config()
+    gen = current_detector()
+    params = ccn.init(jax.random.PRNGKey(0), cfg)
+    graph = ccn.to_graph(params, cfg)
+    data = generate(gen, max(MICROBATCHES), seed=3)
+    feeds = {"hits": data["feats"], "mask": data["mask"]}
+    req = Requirements(design_point=3, platform="cpu",
+                       precision_policy="fp", n_hits=cfg.n_hits,
+                       target_throughput=5e4, max_latency_s=2e-3)
+    rng = np.random.default_rng(0)
+    dh, ds, df, k = cfg.d_hidden, cfg.d_s, cfg.d_flr, cfg.k
+    ws = jnp.asarray(rng.normal(size=(dh, ds)) * 0.3, jnp.float32)
+    bs = jnp.asarray(rng.normal(size=(ds,)), jnp.float32)
+    wf = jnp.asarray(rng.normal(size=(dh, df)) * 0.3, jnp.float32)
+    bf = jnp.asarray(rng.normal(size=(df,)), jnp.float32)
+    wo = jnp.asarray(rng.normal(size=(dh + 2 * df, dh)) * 0.3, jnp.float32)
+    bo = jnp.asarray(rng.normal(size=(dh,)), jnp.float32)
+    wide = jnp.concatenate([ws, wf], axis=1)
+    bwide = jnp.concatenate([bs, bf], axis=0)
+
+    trajectory = []
+    for bucket in BUCKETS:
+        req_b = dataclasses.replace(req, n_hits=bucket)
+        fb = _cut_hits(feeds, bucket)
+        for mb in MICROBATCHES:
+            chunk = jax.tree_util.tree_map(lambda a: a[:mb], fb)
+            x = jnp.asarray(rng.normal(size=(mb, bucket, dh)), jnp.float32)
+            mask = jnp.asarray(rng.uniform(size=(mb, bucket)) < 0.8,
+                               jnp.float32)
+
+            # -- block chain at launch granularity (one dispatch per
+            #    kernel wrapper call, as on hardware) ----------------
+            def block_fused():
+                return ops.gravnet_block_batched(
+                    x, mask, ws, bs, wf, bf, wo, bo, k=k)
+
+            def block_unfused():
+                sf = ops.fused_dense(
+                    x.reshape(mb * bucket, dh), wide, bwide,
+                    activation="none", variant="flattened"
+                ).reshape(mb, bucket, ds + df)
+                agg = ops.gravnet_aggregate_batched(
+                    sf[..., :ds], sf[..., ds:], mask, k=k)
+                h = jnp.concatenate([x, agg], axis=-1)
+                return ops.fused_dense(
+                    h.reshape(mb * bucket, dh + 2 * df), wo, bo,
+                    activation="relu", variant="flattened"
+                ).reshape(mb, bucket, dh)
+
+            t_bf, t_bu = _time_ab(block_fused, block_unfused,
+                                  iters=iters)
+
+            # -- full pipeline, fused vs escape hatch ----------------
+            fused_pipe = deploy(graph, req_b, batch=mb)
+            unfused_pipe = deploy(graph, req_b, batch=mb,
+                                  fuse_gravnet_block=False)
+            t_pf, t_pu = _time_ab(lambda: fused_pipe(chunk),
+                                  lambda: unfused_pipe(chunk),
+                                  iters=iters)
+
+            lc_f = launch_counts(fused_pipe.graph)
+            lc_u = launch_counts(unfused_pipe.graph)
+            point = {
+                "bucket": bucket, "microbatch": mb,
+                "block_fused_us": t_bf * 1e6,
+                "block_unfused_us": t_bu * 1e6,
+                "block_fused_ev_s": mb / t_bf,
+                "block_unfused_ev_s": mb / t_bu,
+                "block_speedup": t_bu / t_bf,
+                "pipe_fused_us": t_pf * 1e6,
+                "pipe_unfused_us": t_pu * 1e6,
+                "pipe_speedup": t_pu / t_pf,
+                "launches_fused": lc_f["total"],
+                "launches_unfused": lc_u["total"],
+                "launches_per_block_fused": lc_f["per_block"],
+                "launches_per_block_unfused": lc_u["per_block"],
+            }
+            trajectory.append(point)
+            row(f"fusion_b{bucket}_mb{mb}_block", t_bf * 1e6,
+                f"vs unfused {t_bu * 1e6:.1f}us "
+                f"speedup {point['block_speedup']:.2f}x "
+                f"launches/block {lc_u['per_block']:.0f}->"
+                f"{lc_f['per_block']:.0f}")
+            row(f"fusion_b{bucket}_mb{mb}_pipeline", t_pf * 1e6,
+                f"vs unfused {t_pu * 1e6:.1f}us "
+                f"speedup {point['pipe_speedup']:.2f}x")
+
+    if out_path:
+        with open(out_path, "w") as f:
+            json.dump({"detector": "current", "buckets": list(BUCKETS),
+                       "microbatches": list(MICROBATCHES),
+                       "trajectory": trajectory}, f, indent=1)
+        print(f"[fusion] wrote {out_path}", file=sys.stderr)
+    return trajectory
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--iters", type=int, default=5)
+    ap.add_argument("--check", action="store_true",
+                    help="fail unless the fused block wins >= 1.2x at "
+                         "every bucket for microbatch >= 8 (and the "
+                         "fused pipeline does not regress)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    traj = run(args.out, iters=args.iters)
+    if args.check:
+        bad = [p for p in traj
+               if p["microbatch"] >= 8 and p["block_speedup"] < 1.2]
+        if bad:
+            raise SystemExit(
+                "fusion: fused block below the 1.2x gate at "
+                + ", ".join(f"b{p['bucket']}/mb{p['microbatch']} "
+                            f"({p['block_speedup']:.2f}x)" for p in bad))
+        # end-to-end guard: the fused pipeline must not get slower
+        # (generous bound — 2-core CI wall time is noisy; the strict
+        # end-to-end gate is serving_scaling vs BENCH_baseline)
+        slow = [p for p in traj
+                if p["microbatch"] >= 8 and p["pipe_speedup"] < 0.75]
+        if slow:
+            raise SystemExit(
+                "fusion: fused pipeline regressed at "
+                + ", ".join(f"b{p['bucket']}/mb{p['microbatch']} "
+                            f"({p['pipe_speedup']:.2f}x)" for p in slow))
+
+
+if __name__ == "__main__":
+    main()

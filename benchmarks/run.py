@@ -9,18 +9,64 @@ Prints ``name,us_per_call,derived`` CSV rows.
   tuning_*    — autotuned vs default kernel configs (tuning cache)
   batching_*  — per-event vs batch-packed launches across occupancy
                 buckets (the occupancy-bucketed serving path)
+  fusion_*    — fused GravNet-block megakernel vs the unfused
+                dense→aggregate→dense chain (launch-count fusion)
 
 A failing section is still reported as a ``name,nan,ERROR ...`` row (so
 one broken figure never hides the others), but the run exits nonzero —
 CI must see a broken benchmark section, not a green job with NaN rows.
+
+Every run also writes ``BENCH_summary.json``: one entry per executed
+section (ok flag, a scalar headline score where the section defines
+one, wall seconds) stamped with the git sha and a timestamp, so the
+perf trajectory across PRs is machine-readable instead of scattered
+per-file.
 """
 from __future__ import annotations
 
+import json
+import os
+import subprocess
 import sys
+import time
+
+_HERE = os.path.dirname(os.path.abspath(__file__))
+_REPO = os.path.dirname(_HERE)
+SUMMARY_PATH = os.path.join(_REPO, "BENCH_summary.json")
+
+
+def _git_sha() -> str:
+    try:
+        out = subprocess.run(["git", "rev-parse", "--short", "HEAD"],
+                             capture_output=True, text=True, cwd=_REPO,
+                             timeout=10)
+        return out.stdout.strip() or "unknown"
+    except Exception:   # noqa: BLE001 — summary must never break the run
+        return "unknown"
+
+
+def _score(fn, result):
+    """Headline scalar per section (higher = better); None when the
+    section's return value does not define one."""
+    try:
+        return fn(result)
+    except Exception:   # noqa: BLE001
+        return None
+
+
+# per-section headline-score extractors, applied to the section's
+# return value (all are defensive — a reshaped return yields None,
+# never a crashed summary)
+_SCORES = {
+    "batching": lambda r: max(p["speedup"] for p in r
+                              if p["microbatch"] >= 8),
+    "fusion": lambda r: min(p["block_speedup"] for p in r
+                            if p["microbatch"] >= 8),
+}
 
 
 def main(argv: list[str] | None = None) -> int:
-    from benchmarks import (batching, design_points, kernels_bench,
+    from benchmarks import (batching, design_points, fusion, kernels_bench,
                             parallelization_sweep, resource_table,
                             roofline, tuning_bench)
     argv = sys.argv[1:] if argv is None else argv
@@ -35,20 +81,39 @@ def main(argv: list[str] | None = None) -> int:
         "roofline": roofline.run,
         "tuning": tuning_bench.run,
         "batching": batching.run,
+        "fusion": fusion.run,
     }
     if only is not None and only not in sections:
         print(f"unknown section {only!r}; have: {', '.join(sections)}",
               file=sys.stderr)
         return 2
     failed = []
+    summary: dict[str, dict] = {}
     for name, fn in sections.items():
         if only and only != name:
             continue
+        t0 = time.perf_counter()
         try:
-            fn()
+            result = fn()
+            entry = {"ok": True,
+                     "score": _score(_SCORES[name], result)
+                     if name in _SCORES else None}
         except Exception as e:  # report and continue to the next section
             print(f"{name},nan,ERROR {e!r}")
             failed.append(name)
+            entry = {"ok": False, "score": None}
+        entry["seconds"] = round(time.perf_counter() - t0, 3)
+        summary[name] = entry
+    try:
+        with open(SUMMARY_PATH, "w") as f:
+            json.dump({"schema": 1, "git_sha": _git_sha(),
+                       "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
+                       "sections": summary}, f, indent=1)
+            f.write("\n")
+        print(f"[run] wrote {SUMMARY_PATH}", file=sys.stderr)
+    except OSError as e:
+        print(f"[run] WARNING: could not write summary: {e}",
+              file=sys.stderr)
     if failed:
         print(f"FAILED sections: {', '.join(failed)}", file=sys.stderr)
         return 1

@@ -27,10 +27,15 @@ from typing import Any
 # Operator types with regular (statically scheduled) access patterns.
 REGULAR_OPS = frozenset({
     "linear", "dense", "relu", "concat", "slice", "retile", "quant",
-    "dequant",
+    "dequant", "attention",
 })
 # Irregular / data-dependent ops (the paper pins these to the FPGA).
-IRREGULAR_OPS = frozenset({"gravnet_aggregate", "cps", "input", "output"})
+# ``gravnet_block`` (the fused dense→aggregate→dense megakernel) carries
+# the aggregation's data-dependent selection, so it classifies exactly
+# like ``gravnet_aggregate``: irregular faithfully, regular under the
+# TPU-native reformulation.
+IRREGULAR_OPS = frozenset({"gravnet_aggregate", "gravnet_block", "cps",
+                           "input", "output"})
 
 
 @dataclass
@@ -155,6 +160,7 @@ class Graph:
 def is_regular(op: Operator, *, tpu_native_gravnet: bool = False) -> bool:
     if op.op_type in REGULAR_OPS:
         return True
-    if tpu_native_gravnet and op.op_type == "gravnet_aggregate":
+    if tpu_native_gravnet and op.op_type in ("gravnet_aggregate",
+                                             "gravnet_block"):
         return True
     return False

@@ -1,12 +1,27 @@
 """Operator-fusion pass (paper §III-A "Operator Fusion").
 
-Two rewrites, both semantics-preserving:
+Three rewrites, all semantics-preserving:
 
 1. **Linear+ReLU → Dense**: a ``linear`` whose *only* consumer is a
    ``relu`` is replaced by one ``dense`` operator carrying the activation
    in its epilogue (lowered onto the fused_dense kernel).
 
-2. **Parallel-Dense merge**: sibling ``linear``/``dense`` operators that
+2. **GravNet-block fusion** (opt-in via ``fuse(g, gravnet_block=True)``;
+   ``deploy`` enables it by default): the whole
+
+       dense(S-proj) ∥ dense(F-proj) → gravnet_aggregate
+           [→ concat(x, agg)] → dense(out)
+
+   chain collapses into ONE ``gravnet_block`` operator, lowered onto the
+   Pallas megakernel (``kernels/gravnet_block.py``) — one launch per
+   block, zero HBM round-trips for the S/F/aggregate intermediates.
+   The rewrite runs *before* the parallel-dense merge (so the S/F
+   projections are still separate operators) and refuses chains it
+   cannot fuse losslessly: a projection or aggregate output with an
+   extra consumer (e.g. a monitor tap), mixed precisions, activations
+   on the projections, or missing biases all keep the chain unfused.
+
+3. **Parallel-Dense merge**: sibling ``linear``/``dense`` operators that
    read the same single predecessor with the same activation and precision
    are merged into one operator whose weight matrix is the column-wise
    concatenation; consumers are rewired onto zero-cost ``slice`` views.
@@ -50,6 +65,112 @@ def _fuse_linear_relu(g: Graph) -> Graph:
             if c.op_type == "linear":
                 c.op_type = "dense"
                 c.attrs.setdefault("activation", "none")
+            out.add(c)
+            renamed[op.name] = c.name
+    out.meta = dict(g.meta)
+    out.validate()
+    return out
+
+
+def _match_gravnet_block(g: Graph, agg: Operator):
+    """Match the fusable chain around one ``gravnet_aggregate``; returns
+    (s_op, f_op, out_op, concat_x, member_names) or None. Every reject
+    condition is a *lossless-fusion* guard — see the module docstring."""
+    if agg.op_type != "gravnet_aggregate" or len(agg.inputs) != 3:
+        return None
+    s_name, f_name, _mask_name = agg.inputs
+    if s_name == f_name:
+        return None
+    s_op, f_op = g[s_name], g[f_name]
+    for proj in (s_op, f_op):
+        if (proj.op_type != "dense" or len(proj.inputs) != 1
+                or proj.attrs.get("activation", "none") != "none"
+                or not proj.params or "w" not in proj.params
+                or "b" not in proj.params):
+            return None
+        # a projection with another consumer (e.g. a monitor tap on the
+        # learned coordinates) must stay materialized
+        if [c.name for c in g.successors(proj.name)] != [agg.name]:
+            return None
+    if s_op.inputs != f_op.inputs:
+        return None
+    x_name = s_op.inputs[0]
+    succ = g.successors(agg.name)
+    if len(succ) != 1:     # aggregate output tapped elsewhere
+        return None
+    nxt = succ[0]
+    if nxt.op_type == "concat":
+        # the CaloClusterNet shape: out dense consumes concat(x, agg)
+        if nxt.inputs != [x_name, agg.name]:
+            return None
+        csucc = g.successors(nxt.name)
+        if len(csucc) != 1:
+            return None
+        out_op, concat_x = csucc[0], True
+        members = [s_name, f_name, agg.name, nxt.name, out_op.name]
+    elif nxt.op_type == "dense":
+        out_op, concat_x = nxt, False
+        members = [s_name, f_name, agg.name, out_op.name]
+    else:
+        return None
+    if (out_op.op_type != "dense" or len(out_op.inputs) != 1
+            or not out_op.params or "w" not in out_op.params
+            or "b" not in out_op.params):
+        return None
+    if len({s_op.precision, f_op.precision, out_op.precision}) != 1:
+        return None
+    return s_op, f_op, out_op, concat_x, members
+
+
+def _fuse_gravnet_block(g: Graph) -> Graph:
+    # collect non-overlapping matches keyed by the chain's last op
+    matches: dict[str, tuple] = {}
+    drop: set[str] = set()
+    for op in g.ops.values():
+        m = _match_gravnet_block(g, op)
+        if m is None:
+            continue
+        s_op, f_op, out_op, concat_x, members = m
+        if any(n in drop for n in members):
+            continue
+        matches[out_op.name] = (op, s_op, f_op, out_op, concat_x)
+        drop.update(members)
+    if not matches:
+        return g
+
+    out = Graph()
+    renamed: dict[str, str] = {}
+    for op in g.ops.values():
+        if op.name in matches:
+            agg, s_op, f_op, out_op, concat_x = matches[op.name]
+            x_name, mask_name = s_op.inputs[0], agg.inputs[2]
+            fused = Operator(
+                name=agg.name + ".block",
+                op_type="gravnet_block",
+                inputs=[renamed.get(x_name, x_name),
+                        renamed.get(mask_name, mask_name)],
+                attrs={
+                    "k": agg.attrs["k"], "scale": agg.attrs["scale"],
+                    "d_s": agg.attrs["d_s"], "d_f": agg.attrs["d_f"],
+                    "d_hidden": int(s_op.params["w"].shape[0]),
+                    "activation": out_op.attrs.get("activation", "none"),
+                    "concat_x": concat_x,
+                },
+                params={
+                    "ws": s_op.params["w"], "bs": s_op.params["b"],
+                    "wf": f_op.params["w"], "bf": f_op.params["b"],
+                    "wo": out_op.params["w"], "bo": out_op.params["b"],
+                },
+                out_dim=out_op.out_dim,
+                precision=out_op.precision,
+            )
+            out.add(fused)
+            renamed[out_op.name] = fused.name
+        elif op.name in drop:
+            continue
+        else:
+            c = op.clone()
+            c.inputs = [renamed.get(i, i) for i in c.inputs]
             out.add(c)
             renamed[op.name] = c.name
     out.meta = dict(g.meta)
@@ -113,9 +234,20 @@ def _merge_parallel_dense(g: Graph) -> Graph:
     return out
 
 
-def fuse(g: Graph) -> Graph:
-    """Run both fusion rewrites to a fixed point."""
+def fuse(g: Graph, *, gravnet_block: bool = False) -> Graph:
+    """Run the fusion rewrites to a fixed point.
+
+    ``gravnet_block=True`` additionally collapses every fusable
+    dense(S)/dense(F) → gravnet_aggregate [→ concat] → dense(out) chain
+    into one ``gravnet_block`` operator. It runs after the linear+relu
+    fusion (so the output dense carries its activation) and before the
+    parallel-dense merge (so the S/F projections are still separate,
+    unmerged operators). ``False`` reproduces the legacy graphs
+    bit-for-bit.
+    """
     g = _fuse_linear_relu(g)
+    if gravnet_block:
+        g = _fuse_gravnet_block(g)
     prev = -1
     while len(g) != prev:
         prev = len(g)

@@ -110,7 +110,8 @@ def kernel_optimize(g: Graph, *, n_rows: int = 128, batch: int = 1,
     # 1b. gravnet row-tile: cache-only (the kernel's own default is the
     # heuristic; a miss leaves attrs_opt untouched → identical bindings)
     if tuning_cache is not None:
-        from repro.tuning.cache import gravnet_key
+        from repro.tuning.cache import (flash_attention_key,
+                                        gravnet_block_key, gravnet_key)
         for op in g:
             if op.op_type != "gravnet_aggregate":
                 continue
@@ -119,6 +120,33 @@ def kernel_optimize(g: Graph, *, n_rows: int = 128, batch: int = 1,
                 "float32", backend, batch=batch))
             if tuned is not None and "bm" in tuned:
                 op.attrs_opt["bm"] = tuned["bm"]
+
+        # 1c. fused GravNet block: cache-only (bm, bn, bk) bindings —
+        # the 5-dim batched key (batch, n, d_hidden, d_f, k); a miss
+        # keeps the wrapper's bitwise-safe defaults (whole-operand
+        # epilogue, bm = min(n, 128))
+        for op in g:
+            if op.op_type != "gravnet_block":
+                continue
+            tuned = tuning_cache.lookup(gravnet_block_key(
+                n_rows, op.attrs["d_hidden"], op.attrs["d_f"],
+                op.attrs["k"], "float32", backend, batch=batch))
+            if tuned is not None:
+                for knob in ("bm", "bn", "bk"):
+                    if knob in tuned:
+                        op.attrs_opt[knob] = tuned[knob]
+
+        # 1d. attention → flash_attention (bq, bk): cache-only
+        for op in g:
+            if op.op_type != "attention":
+                continue
+            tuned = tuning_cache.lookup(flash_attention_key(
+                batch, n_rows, n_rows, op.out_dim or 128, "float32",
+                backend))
+            if tuned is not None:
+                for knob in ("bq", "bk"):
+                    if knob in tuned:
+                        op.attrs_opt[knob] = tuned[knob]
 
     # 2. retile cancellation: retile(B->A) after retile(A->B) bypasses both
     changed = True

@@ -34,6 +34,10 @@ _TEMPLATES = {
     ("linear", "xla"): "xla_dense",
     ("gravnet_aggregate", "mxu"): "gravnet_kernel",
     ("gravnet_aggregate", "xla"): "xla_gravnet",
+    ("gravnet_block", "mxu"): "gravnet_block_kernel",
+    ("gravnet_block", "xla"): "xla_gravnet_block",
+    ("attention", "mxu"): "flash_attention",
+    ("attention", "xla"): "xla_attention",
     ("cps", "mxu"): "xla_cps",
     ("cps", "xla"): "xla_cps",
     ("relu", "mxu"): "xla_eltwise",
@@ -52,9 +56,18 @@ _TEMPLATES = {
     ("retile", "xla"): "xla_retile",
 }
 
-# layout each template produces / expects on its data edges
-_PRODUCES = {"fused_dense": "lane128", "gravnet_kernel": "lane128"}
-_EXPECTS = {"fused_dense": "lane128", "gravnet_kernel": "lane128"}
+# layout each template produces / expects on its data edges; the fused
+# gravnet_block hands tensors over in the MXU lane128 layout on BOTH
+# targets (its executor slices/pads its own operands), so a
+# dense → block → dense chain needs no retiles at all — the unfused
+# chain's concat→dense retile is exactly the layout crossing the
+# megakernel eliminates
+_PRODUCES = {"fused_dense": "lane128", "gravnet_kernel": "lane128",
+             "gravnet_block_kernel": "lane128",
+             "xla_gravnet_block": "lane128"}
+_EXPECTS = {"fused_dense": "lane128", "gravnet_kernel": "lane128",
+            "gravnet_block_kernel": "lane128",
+            "xla_gravnet_block": "lane128"}
 
 
 def map_templates(g: Graph, *, legalize_layouts: bool = True) -> Graph:

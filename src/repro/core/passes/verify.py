@@ -67,6 +67,44 @@ def verify(g: Graph) -> dict:
                     f"{op.name}: S/FLR dims ({dims[ins[0]]},{dims[ins[1]]})"
                     f" != attrs ({ds},{df})")
             dims[op.name] = 2 * df
+        elif t == "gravnet_block":
+            if len(ins) != 2:
+                raise GraphVerificationError(
+                    f"{op.name}: needs (x, mask) inputs")
+            need = ("ws", "bs", "wf", "bf", "wo", "bo")
+            if not op.params or any(p not in op.params for p in need):
+                raise GraphVerificationError(
+                    f"{op.name}: gravnet_block needs params {need}")
+            dh = op.attrs.get("d_hidden")
+            ds, df = op.attrs.get("d_s"), op.attrs.get("d_f")
+            if dims[ins[0]] != dh:
+                raise GraphVerificationError(
+                    f"{op.name}: x provides {dims[ins[0]]}, expects "
+                    f"d_hidden={dh}")
+            if op.params["ws"].shape != (dh, ds):
+                raise GraphVerificationError(
+                    f"{op.name}: ws shape {op.params['ws'].shape} != "
+                    f"({dh},{ds})")
+            if op.params["wf"].shape != (dh, df):
+                raise GraphVerificationError(
+                    f"{op.name}: wf shape {op.params['wf'].shape} != "
+                    f"({dh},{df})")
+            dcat = (dh + 2 * df if op.attrs.get("concat_x", True)
+                    else 2 * df)
+            if op.params["wo"].shape[0] != dcat:
+                raise GraphVerificationError(
+                    f"{op.name}: wo expects {op.params['wo'].shape[0]} "
+                    f"inputs, block provides {dcat}")
+            dims[op.name] = int(op.params["wo"].shape[1])
+        elif t == "attention":
+            if len(ins) != 3:
+                raise GraphVerificationError(
+                    f"{op.name}: needs (q, k, v) inputs")
+            if len({dims[i] for i in ins}) != 1:
+                raise GraphVerificationError(
+                    f"{op.name}: q/k/v dims differ: "
+                    f"{[dims[i] for i in ins]}")
+            dims[op.name] = dims[ins[0]]
         elif t == "cps":
             heads = op.attrs.get("head_names", [])
             if len(ins) != len(heads) + 1:

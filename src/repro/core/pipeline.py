@@ -104,6 +104,10 @@ class _Executor:
                        if isinstance(v, QTensor) else v[..., :d])
         elif t == "gravnet_aggregate":
             out = self._gravnet(op, vals, prec)
+        elif t == "gravnet_block":
+            out = self._gravnet_block(op, vals)
+        elif t == "attention":
+            out = self._attention(op, vals)
         elif t == "cps":
             out = self._cps(op, vals)
         elif t == "output":
@@ -190,6 +194,32 @@ class _Executor:
             sc = op.attrs["act_scale"]
             agg = jnp.clip(jnp.round(agg / sc), -127, 127) * sc
         return agg
+
+    def _gravnet_block(self, op, vals):
+        """One fused GravNet block — a single megakernel launch for the
+        whole micro-batch (fp path; the mixed-precision interior keeps
+        the unfused int8 chain, see ``deploy``)."""
+        x, mask = vals
+        p = op.params
+        dh = p["ws"].shape[0]
+        xf = _as_fp(x)[..., :dh]        # lane128-padded producer
+        kw = {kn: op.attrs_opt[kn] for kn in ("bm", "bn", "bk")
+              if kn in op.attrs_opt}
+        return kops.gravnet_block_batched(
+            xf, mask, p["ws"], p["bs"], p["wf"], p["bf"], p["wo"],
+            p["bo"], k=op.attrs["k"], scale=op.attrs["scale"],
+            activation=op.attrs.get("activation", "none"),
+            concat_x=op.attrs.get("concat_x", True),
+            backend=self.backend, **kw)
+
+    def _attention(self, op, vals):
+        d = op.out_dim
+        q, k_, v = (_as_fp(t)[..., :d] for t in vals)
+        kw = {kn: op.attrs_opt[kn] for kn in ("bq", "bk")
+              if kn in op.attrs_opt}
+        return kops.flash_attention(q, k_, v,
+                                    causal=op.attrs.get("causal", True),
+                                    backend=self.backend, **kw)
 
     def _cps(self, op, vals):
         names = op.attrs["head_names"]
@@ -394,20 +424,34 @@ class CompiledPipeline:
 # -------------------------------------------------------------------- deploy ----
 def deploy(model_graph: Graph, req: Requirements, *,
            calibration_feeds=None, kernel_backend: str | None = None,
-           tuning_cache=None, batch: int = 1) -> CompiledPipeline:
+           tuning_cache=None, batch: int = 1,
+           fuse_gravnet_block: bool = True) -> CompiledPipeline:
     """Run the design flow and emit one executable.
 
     ``batch > 1`` emits a *batch-packed* executable: kernels are bound
     (and tuning-cache keys derived) for the shapes one whole
     micro-batch launches, and the compiled object processes ``batch``
     events per launch with no per-segment chunking. ``batch=1`` is the
-    legacy per-event-shaped executable."""
-    backend = kernel_backend or ("pallas" if req.platform == "tpu" else "xla")
+    legacy per-event-shaped executable.
+
+    ``fuse_gravnet_block`` (default on) collapses every fusable
+    dense(S)/dense(F) → gravnet_aggregate [→ concat] → dense(out)
+    chain into one ``gravnet_block`` megakernel launch at design
+    points ≥ 2. The fp path is bitwise-equal to the unfused chain
+    (tested); ``False`` is the escape hatch and reproduces the legacy
+    graphs — and their tuning-cache keys — bit-for-bit. The mixed
+    precision policy always keeps the unfused chain (its interior is
+    the calibrated int8 dense pipeline, which the fp-arithmetic
+    megakernel would silently de-quantize)."""
+    import os as _os
+    backend = (kernel_backend or _os.environ.get("REPRO_BACKEND")
+               or ("pallas" if req.platform == "tpu" else "xla"))
     from repro.core.passes.verify import verify
     verify(model_graph)  # legality check before any rewrite
     g = model_graph
     if req.design_point >= 2:
-        g = fuse(g)
+        g = fuse(g, gravnet_block=(fuse_gravnet_block
+                                   and req.precision_policy != "mixed"))
         verify(g)        # fusion must preserve well-formedness
     g = partition(g, tpu_native_gravnet=req.tpu_native_gravnet)
     g = apply_precision_policy(
@@ -564,7 +608,8 @@ def deploy_bucketed(model_graph: Graph, req: Requirements, *,
                     buckets=(32, 64, 128), microbatch: int = 8,
                     calibration_feeds=None,
                     kernel_backend: str | None = None,
-                    tuning_cache=None) -> BucketedPipeline:
+                    tuning_cache=None,
+                    fuse_gravnet_block: bool = True) -> BucketedPipeline:
     """Run the design flow once per occupancy bucket.
 
     Each bucket b gets its own batch-packed executable deployed at
@@ -583,6 +628,7 @@ def deploy_bucketed(model_graph: Graph, req: Requirements, *,
             else _cut_hits(calibration_feeds, b)
         pipes[b] = deploy(model_graph, req_b, calibration_feeds=calib_b,
                           kernel_backend=kernel_backend,
-                          tuning_cache=tuning_cache, batch=microbatch)
+                          tuning_cache=tuning_cache, batch=microbatch,
+                          fuse_gravnet_block=fuse_gravnet_block)
     return BucketedPipeline(pipes, microbatch=microbatch,
                             example_feeds=calibration_feeds)

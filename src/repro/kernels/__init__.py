@@ -6,6 +6,9 @@
 - gravnet     : GravNetConv neighbor selection + potential-weighted
                 aggregation, reformulated MXU-natively (argmin/one-hot
                 matmul instead of kNN gather).
+- gravnet_block : the fused GravNet-block *megakernel* — S/F dense
+                prologue → aggregation → output-dense epilogue in one
+                launch (the operator-fusion pass's block rewrite).
 
 Both kernels also have *batched* entry points (``fused_dense_batched``,
 ``gravnet_aggregate_batched``) with a leading event grid dimension so a
@@ -17,4 +20,5 @@ ops.py holds the jit'd public wrappers (backend='xla'|'pallas'|
 """
 from repro.kernels.ops import (fused_dense, fused_dense_batched,
                                fused_dense_int8, gravnet_aggregate,
-                               gravnet_aggregate_batched)
+                               gravnet_aggregate_batched, gravnet_block,
+                               gravnet_block_batched)

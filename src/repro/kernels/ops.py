@@ -14,6 +14,7 @@ arbitrary shapes.
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
@@ -24,11 +25,22 @@ from repro.kernels.fused_dense import (fused_dense_batched_pallas,
                                        fused_dense_pallas)
 from repro.kernels.gravnet import (gravnet_aggregate_batched_pallas,
                                    gravnet_aggregate_pallas)
+from repro.kernels.gravnet_block import (gravnet_block_batched_pallas,
+                                         gravnet_block_pallas)
 
 
 def _resolve(backend: str) -> str:
     if backend != "auto":
         return backend
+    # REPRO_BACKEND pins the 'auto' resolution — CI runs one tier-1 leg
+    # with REPRO_BACKEND=pallas_interpret so every kernel body is
+    # exercised in interpret mode on every PR. Process-start semantics:
+    # the env var is read at trace time inside the jit'd wrappers, so
+    # set it before the first kernel call — flipping it mid-process
+    # does not invalidate already-traced 'auto' executables.
+    env = os.environ.get("REPRO_BACKEND")
+    if env:
+        return env
     return "pallas" if jax.default_backend() == "tpu" else "xla"
 
 
@@ -169,6 +181,80 @@ def fused_dense_batched(x, w, b=None, *, activation="relu",
                                    variant="flattened", out_dtype=x.dtype,
                                    interpret=interpret)
     return y[..., :n]
+
+
+# ------------------------------------------------------------ gravnet block ----
+def _gnblock_weight_barrier(*weights):
+    """XLA CPU specializes dot codegen when a weight is a compile-time
+    constant (the whole-pipeline jit closes over the params), which can
+    change f32 accumulation bits vs the same dot with runtime operands.
+    The barrier pins argument-style codegen so the fused block is
+    bitwise-stable across jit contexts — and bitwise-equal to the
+    unfused chain, whose kernels see the weights at different shapes
+    that happen not to trigger the specialization."""
+    return jax.lax.optimization_barrier(weights)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "scale", "activation",
+                                             "concat_x", "bm", "bn", "bk",
+                                             "backend"))
+def gravnet_block(x, mask, ws, bs, wf, bf, wo, bo, *, k=8, scale=10.0,
+                  activation="relu", concat_x=True, bm=None, bn=None,
+                  bk=None, backend="auto"):
+    """One fused GravNet block (megakernel): S/F projection prologue →
+    k-NN aggregation → output dense epilogue, one launch.
+
+    x:(N,dh) hidden activations, mask:(N,) validity -> (N, d_out).
+    """
+    backend = _resolve(backend)
+    if backend == "xla":
+        return _ref.gravnet_block_ref(x, mask, ws, bs, wf, bf, wo, bo,
+                                      k=k, scale=scale,
+                                      activation=activation,
+                                      concat_x=concat_x)
+    interpret = backend == "pallas_interpret"
+    n = x.shape[0]
+    bm = bm or min(n, 128)
+    xp = _pad_to(x, bm, 0)
+    mp = _pad_to(mask.astype(jnp.float32), bm, 0)
+    ws, bs, wf, bf, wo, bo = _gnblock_weight_barrier(ws, bs, wf, bf, wo, bo)
+    y = gravnet_block_pallas(xp, mp, ws, bs, wf, bf, wo, bo, k=k,
+                             scale=scale, activation=activation,
+                             concat_x=concat_x, bm=bm, bn=bn, bk=bk,
+                             interpret=interpret)
+    return y[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("k", "scale", "activation",
+                                             "concat_x", "bm", "bn", "bk",
+                                             "backend"))
+def gravnet_block_batched(x, mask, ws, bs, wf, bf, wo, bo, *, k=8,
+                          scale=10.0, activation="relu", concat_x=True,
+                          bm=None, bn=None, bk=None, backend="auto"):
+    """Micro-batched fused GravNet block — one launch per micro-batch.
+
+    x:(B,N,dh), mask:(B,N) -> (B, N, d_out). The batched kernel runs
+    grid (B, N/bm) with per-event masking (block-diagonal neighbor
+    selection) and weights shared across the event grid; f32 results
+    match a loop of per-event calls bitwise.
+    """
+    backend = _resolve(backend)
+    if backend == "xla":
+        return _ref.gravnet_block_ref(x, mask, ws, bs, wf, bf, wo, bo,
+                                      k=k, scale=scale,
+                                      activation=activation,
+                                      concat_x=concat_x)
+    interpret = backend == "pallas_interpret"
+    n = x.shape[1]
+    bm = bm or min(n, 128)
+    xp = _pad_to(x, bm, 1)
+    mp = _pad_to(mask.astype(jnp.float32), bm, 1)
+    ws, bs, wf, bf, wo, bo = _gnblock_weight_barrier(ws, bs, wf, bf, wo, bo)
+    y = gravnet_block_batched_pallas(xp, mp, ws, bs, wf, bf, wo, bo, k=k,
+                                     scale=scale, activation=activation,
+                                     concat_x=concat_x, bm=bm, bn=bn,
+                                     bk=bk, interpret=interpret)
+    return y[:, :n]
 
 
 # --------------------------------------------------------- flash attention ----

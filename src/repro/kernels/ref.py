@@ -114,6 +114,31 @@ def gravnet_aggregate_ref(s, f, mask, *, k=8, scale=10.0, out_dtype=None):
     return jnp.concatenate([mean, mx], axis=1).astype(out_dtype)
 
 
+# ------------------------------------------------------------ gravnet block ----
+def gravnet_block_ref(x, mask, ws, bs, wf, bf, wo, bo, *, k=8, scale=10.0,
+                      activation="relu", concat_x=True, out_dtype=None):
+    """Oracle for the fused GravNet-block megakernel: the *unfused*
+    dense(S) ∥ dense(F) → aggregate → dense(out) chain, composed from
+    the same per-op oracles the unfused executor dispatches. Accepts
+    per-event (N, dh) or batched (B, N, dh) operands."""
+    out_dtype = out_dtype or x.dtype
+    s = fused_dense_ref(x, ws, bs, activation="none",
+                        out_dtype=jnp.float32)
+    f = fused_dense_ref(x, wf, bf, activation="none",
+                        out_dtype=jnp.float32)
+
+    def agg_one(ss, ff, mm):
+        return gravnet_aggregate_ref(ss, ff, mm, k=k, scale=scale,
+                                     out_dtype=jnp.float32)
+
+    agg = (jax.vmap(agg_one)(s, f, mask) if x.ndim == 3
+           else agg_one(s, f, mask))
+    h = (jnp.concatenate([x.astype(jnp.float32), agg], axis=-1)
+         if concat_x else agg)
+    return fused_dense_ref(h, wo, bo, activation=activation,
+                           out_dtype=out_dtype)
+
+
 # --------------------------------------------------------- flash attention ----
 def flash_attention_ref(q, k, v, *, causal=True):
     """Plain softmax attention oracle. q:(BH,S,D) k,v:(BH,T,D)."""

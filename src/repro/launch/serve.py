@@ -97,6 +97,11 @@ def main():
                     help="autotune this deployment's kernel shapes "
                          "before serving; winners are persisted to "
                          "--tuning-cache when given")
+    ap.add_argument("--no-fuse-gravnet-block", action="store_true",
+                    help="escape hatch: keep the unfused dense→"
+                         "aggregate→dense GravNet chains (legacy "
+                         "graphs and tuning-cache keys, bit-for-bit) "
+                         "instead of the fused megakernel")
     args = ap.parse_args()
 
     if args.detector == "current":
@@ -157,11 +162,13 @@ def main():
     monitor_cfg = {"detector": gen_cfg,
                    "display_n": max(args.event_display_n, 64)} \
         if monitoring else False
+    fuse_block = not args.no_fuse_gravnet_block
     if args.buckets:
         mb = args.bucket_microbatch
         bpipe = deploy_bucketed(graph, req, buckets=args.buckets,
                                 microbatch=mb, calibration_feeds=feeds,
-                                tuning_cache=cache)
+                                tuning_cache=cache,
+                                fuse_gravnet_block=fuse_block)
         if args.tune:
             fresh = _tune_and_rebind(
                 cache, args,
@@ -169,7 +176,8 @@ def main():
                  for b, p in bpipe.pipes.items()],
                 lambda: deploy_bucketed(
                     graph, req, buckets=args.buckets, microbatch=mb,
-                    calibration_feeds=feeds, tuning_cache=cache))
+                    calibration_feeds=feeds, tuning_cache=cache,
+                    fuse_gravnet_block=fuse_block))
             if fresh is not None:
                 bpipe = fresh
         print(f"[serve] deployed design ③{args.design_point} "
@@ -183,12 +191,13 @@ def main():
               f"{sum(r.warmed for r in eng.replicas)}")
     else:
         pipe = deploy(graph, req, calibration_feeds=feeds,
-                      tuning_cache=cache)
+                      tuning_cache=cache, fuse_gravnet_block=fuse_block)
         if args.tune:
             fresh = _tune_and_rebind(
                 cache, args, [(pipe.graph, cfg.n_hits, 1, pipe.backend)],
                 lambda: deploy(graph, req, calibration_feeds=feeds,
-                               tuning_cache=cache))
+                               tuning_cache=cache,
+                               fuse_gravnet_block=fuse_block))
             if fresh is not None:
                 pipe = fresh
         print(f"[serve] deployed design ③{args.design_point} "

@@ -30,7 +30,8 @@ import numpy as np
 
 from repro.tuning import candidates as cand
 from repro.tuning.cache import (KernelKey, TuningCache, flash_attention_key,
-                                fused_dense_key, gravnet_key)
+                                fused_dense_key, gravnet_block_key,
+                                gravnet_key)
 
 MIN_GAIN = 0.03
 
@@ -162,6 +163,67 @@ def tune_gravnet(n: int, d_s: int, d_f: int, k: int, *,
     return _finish(cache, key, timed, min_gain=min_gain)
 
 
+# ------------------------------------------------------------ gravnet block ----
+def tune_gravnet_block(n: int, d_hidden: int, d_s: int, d_f: int,
+                       d_out: int, k: int, *, batch: int = 1,
+                       activation: str = "relu", concat_x: bool = True,
+                       dtype: str = "float32", backend: str = "xla",
+                       cache: TuningCache | None = None, iters: int = 5,
+                       min_gain: float = MIN_GAIN, seed: int = 0) -> dict:
+    """Tune the fused GravNet-block megakernel at one problem shape.
+
+    The 5-dim key carries (batch, n, d_hidden, d_f, k); the remaining
+    block dims (d_s, d_out, activation, concat_x) are stored inside the
+    cached config so serving warm-up can replay the exact problem —
+    ``kernel_opt`` only ever binds the (bm, bn, bk) knobs."""
+    import jax.numpy as jnp
+
+    from repro.kernels import ops
+    rng = np.random.default_rng(seed)
+    dt = _np_dtype(dtype)
+    dcat = d_hidden + 2 * d_f if concat_x else 2 * d_f
+    ws = jnp.asarray(rng.normal(size=(d_hidden, d_s)) * 0.3, dt)
+    bs = jnp.asarray(rng.normal(size=(d_s,)), dt)
+    wf = jnp.asarray(rng.normal(size=(d_hidden, d_f)) * 0.3, dt)
+    bf = jnp.asarray(rng.normal(size=(d_f,)), dt)
+    wo = jnp.asarray(rng.normal(size=(dcat, d_out)) * 0.3, dt)
+    bo = jnp.asarray(rng.normal(size=(d_out,)), dt)
+    if batch > 1:
+        x = jnp.asarray(rng.normal(size=(batch, n, d_hidden)), dt)
+        mask = jnp.asarray(rng.uniform(size=(batch, n)) < 0.8, jnp.float32)
+
+        def call(cfg):
+            return ops.gravnet_block_batched(
+                x, mask, ws, bs, wf, bf, wo, bo, k=k,
+                activation=activation, concat_x=concat_x,
+                backend=backend, **cfg)
+    else:
+        x = jnp.asarray(rng.normal(size=(n, d_hidden)), dt)
+        mask = jnp.asarray(rng.uniform(size=(n,)) < 0.8, jnp.float32)
+
+        def call(cfg):
+            return ops.gravnet_block(
+                x, mask, ws, bs, wf, bf, wo, bo, k=k,
+                activation=activation, concat_x=concat_x,
+                backend=backend, **cfg)
+
+    cands = cand.gravnet_block_candidates(n, d_hidden, d_f, d_out,
+                                          concat_x=concat_x, batch=batch)
+    if backend in _KNOB_INERT_BACKENDS:
+        cands = cands[:1]
+    timed = [(cfg, _time_call(lambda c=cfg: call(c), iters=iters))
+             for cfg in cands]
+    key = gravnet_block_key(n, d_hidden, d_f, k, dtype, backend,
+                            batch=batch)
+    best_cfg, best_t, default_t = _pick(timed, min_gain=min_gain)
+    if cache is not None:
+        cache.put(key, {**best_cfg, "d_s": d_s, "d_out": d_out,
+                        "activation": activation, "concat_x": concat_x},
+                  us=best_t * 1e6, default_us=default_t * 1e6,
+                  candidates=len(timed))
+    return best_cfg
+
+
 # -------------------------------------------------------- flash attention ----
 def tune_flash_attention(bh: int, s: int, t: int, d: int, *,
                          causal: bool = True, dtype: str = "float32",
@@ -210,6 +272,16 @@ def graph_kernel_problems(g, *, n_rows: int, backend: str,
             key = gravnet_key(n_rows, op.attrs["d_s"], op.attrs["d_f"],
                               op.attrs["k"], "float32", backend,
                               batch=batch)
+        elif op.op_type == "gravnet_block":
+            key = gravnet_block_key(n_rows, op.attrs["d_hidden"],
+                                    op.attrs["d_f"], op.attrs["k"],
+                                    "float32", backend, batch=batch)
+        elif op.op_type == "attention":
+            # the executor launches one (B, N, d) flash call per
+            # micro-batch: bh = the packed batch, s = t = n_rows
+            key = flash_attention_key(batch, n_rows, n_rows,
+                                      op.out_dim or 128, "float32",
+                                      backend)
         else:
             continue
         if key not in seen:
@@ -241,6 +313,36 @@ def autotune_graph(g, *, n_rows: int, backend: str, cache: TuningCache,
             tune_gravnet(n, d_s, d_f, k, batch=kb, dtype=key.dtype,
                          backend=backend, cache=cache, iters=iters,
                          min_gain=min_gain)
+        elif key.kernel == "gravnet_block":
+            shape = key.shape
+            kb = shape[0] if len(shape) == 5 else 1
+            n, dh, d_f, k = shape[-4:]
+            # recover the dims the 5-dim key doesn't carry from the op
+            extras = {"d_s": 4, "d_out": dh, "activation": "relu",
+                      "concat_x": True}
+            for op in g:
+                if (op.op_type == "gravnet_block"
+                        and op.attrs.get("d_hidden") == dh
+                        and op.attrs.get("d_f") == d_f
+                        and op.attrs.get("k") == k):
+                    extras = {
+                        "d_s": op.attrs["d_s"],
+                        "d_out": op.out_dim or dh,
+                        "activation": op.attrs.get("activation", "relu"),
+                        "concat_x": op.attrs.get("concat_x", True)}
+                    break
+            tune_gravnet_block(n, dh, extras["d_s"], d_f,
+                               extras["d_out"], k, batch=kb,
+                               activation=extras["activation"],
+                               concat_x=extras["concat_x"],
+                               dtype=key.dtype, backend=backend,
+                               cache=cache, iters=iters,
+                               min_gain=min_gain)
+        elif key.kernel == "flash_attention":
+            bh, s, t, d = key.shape
+            tune_flash_attention(bh, s, t, d, dtype=key.dtype,
+                                 backend=backend, cache=cache,
+                                 iters=iters, min_gain=min_gain)
         else:
             continue
         tuned += 1

@@ -75,6 +75,22 @@ def gravnet_key(n: int, d_s: int, d_f: int, k: int, dtype: str,
     return KernelKey("gravnet", (n, d_s, d_f, k), dtype, backend)
 
 
+def gravnet_block_key(n: int, d_hidden: int, d_f: int, k: int, dtype: str,
+                      backend: str, batch: int = 1) -> KernelKey:
+    """Key for the fused GravNet-block megakernel. Mirrors
+    ``gravnet_key``: ``n`` is the per-event graph size (= the occupancy
+    bucket), ``batch`` the leading event grid dimension of a
+    batch-packed executable — 5-dim shape when batched, 4-dim
+    per-event. ``d_hidden`` (the x operand width) and ``d_f`` pin the
+    prologue and (with ``concat_x``) the epilogue K; the remaining
+    block dims (d_s, d_out) ride along inside the cached config so
+    warm-up can replay the exact problem."""
+    if batch > 1:
+        return KernelKey("gravnet_block", (batch, n, d_hidden, d_f, k),
+                         dtype, backend)
+    return KernelKey("gravnet_block", (n, d_hidden, d_f, k), dtype, backend)
+
+
 def flash_attention_key(bh: int, s: int, t: int, d: int, dtype: str,
                         backend: str) -> KernelKey:
     return KernelKey("flash_attention", (bh, s, t, d), dtype, backend)

@@ -103,6 +103,36 @@ def gravnet_candidates(n: int, *, batch: int = 1,
     return _dedup_keep_order(cands)[:max_candidates]
 
 
+def default_gravnet_block(n: int, batch: int = 1) -> dict:
+    """Heuristic default for the fused block: the aggregation row tile
+    (shared with the standalone gravnet kernel — batch-invariant) and a
+    whole-operand epilogue (no bn/bk splits), which is the bitwise-safe
+    configuration the executor uses on a cache miss."""
+    return {"bm": min(n, 128)}
+
+
+def gravnet_block_candidates(n: int, d_hidden: int, d_f: int, d_out: int,
+                             *, concat_x: bool = True, batch: int = 1,
+                             max_candidates: int = 10) -> list[dict]:
+    """Search space for the megakernel: the row tile ``bm`` plus the
+    epilogue's ``(bn, bk)`` blocking. ``bn`` splits output columns
+    (bitwise-neutral); ``bk`` splits the epilogue K reduction (last-ulp
+    f32 association may differ — it must win on measured time)."""
+    cands = [default_gravnet_block(n, batch)]
+    for bm in _pow2_range(8, 512):
+        if n % bm == 0:        # the kernel asserts n % bm == 0
+            cands.append({"bm": bm})
+    bm0 = default_gravnet_block(n, batch)["bm"]
+    dcat = d_hidden + 2 * d_f if concat_x else 2 * d_f
+    for bn in _pow2_range(32, 256):
+        if bn < d_out:
+            cands.append({"bm": bm0, "bn": bn})
+    for bk in _pow2_range(32, 256):
+        if bk < dcat:
+            cands.append({"bm": bm0, "bk": bk})
+    return _dedup_keep_order(cands)[:max_candidates]
+
+
 def default_flash_attention() -> dict:
     return {"bq": 128, "bk": 128}
 

@@ -61,6 +61,41 @@ def _replay(key, config) -> None:
             mask = jnp.ones((n,), jnp.float32)
             out = ops.gravnet_aggregate(s, f, mask, k=k, backend=backend,
                                         **config)
+    elif key.kernel == "gravnet_block":
+        cfg = dict(config)
+        # the 5-dim key carries (batch, n, d_hidden, d_f, k); the
+        # remaining block dims ride inside the cached config
+        d_s = int(cfg.pop("d_s", 4))
+        d_out = int(cfg.pop("d_out", 0))
+        activation = cfg.pop("activation", "relu")
+        concat_x = bool(cfg.pop("concat_x", True))
+        if len(key.shape) == 5:
+            batch, n, dh, d_f, k = key.shape
+        else:
+            n, dh, d_f, k = key.shape
+            batch = 1
+        d_out = d_out or dh
+        dcat = dh + 2 * d_f if concat_x else 2 * d_f
+        ws = jnp.asarray(rng.normal(size=(dh, d_s)) * 0.3, jnp.float32)
+        bs = jnp.asarray(rng.normal(size=(d_s,)), jnp.float32)
+        wf = jnp.asarray(rng.normal(size=(dh, d_f)) * 0.3, jnp.float32)
+        bf = jnp.asarray(rng.normal(size=(d_f,)), jnp.float32)
+        wo = jnp.asarray(rng.normal(size=(dcat, d_out)) * 0.3, jnp.float32)
+        bo = jnp.asarray(rng.normal(size=(d_out,)), jnp.float32)
+        if batch > 1:
+            x = jnp.asarray(rng.normal(size=(batch, n, dh)), jnp.float32)
+            mask = jnp.ones((batch, n), jnp.float32)
+            out = ops.gravnet_block_batched(x, mask, ws, bs, wf, bf, wo,
+                                            bo, k=k, activation=activation,
+                                            concat_x=concat_x,
+                                            backend=backend, **cfg)
+        else:
+            x = jnp.asarray(rng.normal(size=(n, dh)), jnp.float32)
+            mask = jnp.ones((n,), jnp.float32)
+            out = ops.gravnet_block(x, mask, ws, bs, wf, bf, wo, bo, k=k,
+                                    activation=activation,
+                                    concat_x=concat_x, backend=backend,
+                                    **cfg)
     elif key.kernel == "flash_attention":
         bh, s, t, d = key.shape
         q = jnp.asarray(rng.normal(size=(bh, s, d)), jnp.float32)

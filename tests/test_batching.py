@@ -254,7 +254,8 @@ def test_kernel_opt_batch_folds_into_dense_rows(trigger_setup):
     cfg, gen, graph, req, events, feeds = trigger_setup
     from repro.core.passes.kernel_opt import fused_dense_shape
     from repro.tuning import graph_kernel_problems
-    pipe = deploy(graph, req, batch=8)
+    # legacy (unfused-GravNet) executable: gravnet keys carry the batch
+    pipe = deploy(graph, req, batch=8, fuse_gravnet_block=False)
     for op in pipe.graph:
         if op.template == "fused_dense":
             rows, _, _ = fused_dense_shape(op, cfg.n_hits, 8)
@@ -263,6 +264,13 @@ def test_kernel_opt_batch_folds_into_dense_rows(trigger_setup):
                                  backend="xla", batch=8)
     gk = [k for k in keys if k.kernel == "gravnet"]
     assert gk and all(k.shape[0] == 8 for k in gk)
+    # default (fused) executable: the megakernel keys carry it instead
+    pipe_f = deploy(graph, req, batch=8)
+    keys_f = graph_kernel_problems(pipe_f.graph, n_rows=cfg.n_hits,
+                                   backend="xla", batch=8)
+    bk = [k for k in keys_f if k.kernel == "gravnet_block"]
+    assert bk and all(k.shape[0] == 8 for k in bk)
+    assert not any(k.kernel == "gravnet" for k in keys_f)
 
 
 def test_warmup_replays_batched_gravnet_key():
