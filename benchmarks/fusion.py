@@ -1,7 +1,7 @@
 """GravNet-block fusion benchmark: fused megakernel vs the unfused
 dense→aggregate→dense chain, across occupancy buckets × micro-batches.
 
-Two measurements per (bucket, microbatch) point:
+Three measurements per (bucket, microbatch) point:
 
   block_*  — the GravNet-block operator chain at *launch granularity*:
              every kernel wrapper call is its own dispatch, exactly as
@@ -11,6 +11,13 @@ Two measurements per (bucket, microbatch) point:
              quantity the megakernel changes and the one the ``--check``
              gate enforces (fused ≥ 1.2× unfused events/s at
              micro-batch ≥ 8).
+  int8_*   — the same A/B for the *quantized* block: the fused
+             ``gravnet_block_int8`` megakernel vs the calibrated
+             unfused int8 chain (quantize → merged int8 S/F dense →
+             aggregate → requantization snap → quantize → int8 output
+             dense). The unfused side pays the inter-kernel
+             requantization glue the megakernel keeps in VMEM, so the
+             gate is the same ≥ 1.2× at micro-batch ≥ 8.
   pipe_*   — the full deployed pipeline (whole-pipeline jit), fused vs
              ``deploy(fuse_gravnet_block=False)``. On CPU the XLA
              whole-program jit already hides launch boundaries, so this
@@ -120,6 +127,17 @@ def run(out_path: str | None = None, iters: int = 5):
     wide = jnp.concatenate([ws, wf], axis=1)
     bwide = jnp.concatenate([bs, bf], axis=0)
 
+    # quantized operands for the int8 A/B: per-channel weights plus
+    # representative baked activation scales (speed is scale-invariant)
+    from repro.core.quantization import quantize_weight
+    ws_q, ws_s = quantize_weight(ws)
+    wf_q, wf_s = quantize_weight(wf)
+    wo_q, wo_s = quantize_weight(wo)
+    wide_q, wide_s = quantize_weight(wide)
+    x_scale, agg_scale, h_scale = 0.02, 0.01, 0.02
+    xs_arr = jnp.asarray([[x_scale]], jnp.float32)
+    hs_arr = jnp.asarray([[h_scale]], jnp.float32)
+
     trajectory = []
     for bucket in BUCKETS:
         req_b = dataclasses.replace(req, n_hits=bucket)
@@ -152,6 +170,35 @@ def run(out_path: str | None = None, iters: int = 5):
             t_bf, t_bu = _time_ab(block_fused, block_unfused,
                                   iters=iters)
 
+            # -- quantized block chain, same launch granularity ------
+            def int8_fused():
+                return ops.gravnet_block_int8_batched(
+                    x, mask, ws_q, bs, wf_q, bf, wo_q, bo,
+                    ws_s, wf_s, wo_s, x_scale=x_scale,
+                    agg_scale=agg_scale, h_scale=h_scale, k=k)
+
+            def int8_unfused():
+                xq = jnp.clip(jnp.round(x / x_scale), -127,
+                              127).astype(jnp.int8)
+                sf = ops.fused_dense_int8(
+                    xq.reshape(mb * bucket, dh), wide_q, bwide,
+                    xs_arr, wide_s, activation="none"
+                ).reshape(mb, bucket, ds + df)
+                agg = ops.gravnet_aggregate_batched(
+                    sf[..., :ds], sf[..., ds:], mask, k=k)
+                agg = jnp.clip(jnp.round(agg / agg_scale), -127,
+                               127) * agg_scale
+                h = jnp.concatenate([x, agg], axis=-1)
+                hq = jnp.clip(jnp.round(h / h_scale), -127,
+                              127).astype(jnp.int8)
+                return ops.fused_dense_int8(
+                    hq.reshape(mb * bucket, dh + 2 * df), wo_q, bo,
+                    hs_arr, wo_s, activation="relu"
+                ).reshape(mb, bucket, dh)
+
+            t_qf, t_qu = _time_ab(int8_fused, int8_unfused,
+                                  iters=iters)
+
             # -- full pipeline, fused vs escape hatch ----------------
             fused_pipe = deploy(graph, req_b, batch=mb)
             unfused_pipe = deploy(graph, req_b, batch=mb,
@@ -169,6 +216,11 @@ def run(out_path: str | None = None, iters: int = 5):
                 "block_fused_ev_s": mb / t_bf,
                 "block_unfused_ev_s": mb / t_bu,
                 "block_speedup": t_bu / t_bf,
+                "int8_fused_us": t_qf * 1e6,
+                "int8_unfused_us": t_qu * 1e6,
+                "int8_fused_ev_s": mb / t_qf,
+                "int8_unfused_ev_s": mb / t_qu,
+                "int8_speedup": t_qu / t_qf,
                 "pipe_fused_us": t_pf * 1e6,
                 "pipe_unfused_us": t_pu * 1e6,
                 "pipe_speedup": t_pu / t_pf,
@@ -183,6 +235,9 @@ def run(out_path: str | None = None, iters: int = 5):
                 f"speedup {point['block_speedup']:.2f}x "
                 f"launches/block {lc_u['per_block']:.0f}->"
                 f"{lc_f['per_block']:.0f}")
+            row(f"fusion_b{bucket}_mb{mb}_int8_block", t_qf * 1e6,
+                f"vs unfused {t_qu * 1e6:.1f}us "
+                f"speedup {point['int8_speedup']:.2f}x")
             row(f"fusion_b{bucket}_mb{mb}_pipeline", t_pf * 1e6,
                 f"vs unfused {t_pu * 1e6:.1f}us "
                 f"speedup {point['pipe_speedup']:.2f}x")
@@ -201,9 +256,10 @@ def main():
     ap.add_argument("--out", default=None)
     ap.add_argument("--iters", type=int, default=5)
     ap.add_argument("--check", action="store_true",
-                    help="fail unless the fused block wins >= 1.2x at "
-                         "every bucket for microbatch >= 8 (and the "
-                         "fused pipeline does not regress)")
+                    help="fail unless the fused block (f32 AND int8) "
+                         "wins >= 1.2x at every bucket for microbatch "
+                         ">= 8 (and the fused pipeline does not "
+                         "regress)")
     args = ap.parse_args()
     print("name,us_per_call,derived")
     traj = run(args.out, iters=args.iters)
@@ -215,6 +271,13 @@ def main():
                 "fusion: fused block below the 1.2x gate at "
                 + ", ".join(f"b{p['bucket']}/mb{p['microbatch']} "
                             f"({p['block_speedup']:.2f}x)" for p in bad))
+        bad8 = [p for p in traj
+                if p["microbatch"] >= 8 and p["int8_speedup"] < 1.2]
+        if bad8:
+            raise SystemExit(
+                "fusion: fused int8 block below the 1.2x gate at "
+                + ", ".join(f"b{p['bucket']}/mb{p['microbatch']} "
+                            f"({p['int8_speedup']:.2f}x)" for p in bad8))
         # end-to-end guard: the fused pipeline must not get slower
         # (generous bound — 2-core CI wall time is noisy; the strict
         # end-to-end gate is serving_scaling vs BENCH_baseline)

@@ -60,8 +60,8 @@ def _score(fn, result):
 _SCORES = {
     "batching": lambda r: max(p["speedup"] for p in r
                               if p["microbatch"] >= 8),
-    "fusion": lambda r: min(p["block_speedup"] for p in r
-                            if p["microbatch"] >= 8),
+    "fusion": lambda r: min(min(p["block_speedup"], p["int8_speedup"])
+                            for p in r if p["microbatch"] >= 8),
 }
 
 

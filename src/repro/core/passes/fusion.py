@@ -18,8 +18,14 @@ Three rewrites, all semantics-preserving:
    The rewrite runs *before* the parallel-dense merge (so the S/F
    projections are still separate operators) and refuses chains it
    cannot fuse losslessly: a projection or aggregate output with an
-   extra consumer (e.g. a monitor tap), mixed precisions, activations
-   on the projections, or missing biases all keep the chain unfused.
+   extra consumer (e.g. a monitor tap), activations on the
+   projections, or missing biases all keep the chain unfused. The
+   precision guard is *set*-aware: uniform fp/bf16 chains lower onto
+   the f32 megakernel, uniform int8 chains with calibration present
+   (quantized weights + activation scales) lower onto the quantized
+   megakernel, and only genuinely mixed member precisions — or
+   uncalibrated int8 (which executes as fp fallback op by op) — keep
+   the chain unfused.
 
 3. **Parallel-Dense merge**: sibling ``linear``/``dense`` operators that
    read the same single predecessor with the same activation and precision
@@ -117,8 +123,25 @@ def _match_gravnet_block(g: Graph, agg: Operator):
             or not out_op.params or "w" not in out_op.params
             or "b" not in out_op.params):
         return None
-    if len({s_op.precision, f_op.precision, out_op.precision}) != 1:
+    # precision-set-aware guard: a chain is fusable when its members
+    # run ONE precision. Uniform fp/bf16 lowers onto the f32 megakernel;
+    # uniform int8 lowers onto the quantized megakernel — but only when
+    # every dense member is actually *calibrated* (quantized weights
+    # present), since an uncalibrated int8 chain executes as fp fallback
+    # op by op and fusing it would freeze that accident into one kernel.
+    # Genuinely mixed member precisions always stay unfused.
+    precs = {s_op.precision, f_op.precision, agg.precision,
+             out_op.precision}
+    if len(precs) != 1:
         return None
+    if precs == {"int8"}:
+        calibrated = (all("w_q" in (o.params or {})
+                          for o in (s_op, f_op, out_op))
+                      and "act_scale" in agg.attrs
+                      and "in_scale" in s_op.attrs
+                      and "in_scale" in out_op.attrs)
+        if not calibrated:
+            return None
     return s_op, f_op, out_op, concat_x, members
 
 
@@ -164,6 +187,20 @@ def _fuse_gravnet_block(g: Graph) -> Graph:
                 out_dim=out_op.out_dim,
                 precision=out_op.precision,
             )
+            if out_op.precision == "int8" and "w_q" in out_op.params:
+                # already-calibrated chain (fusing post-calibrate):
+                # carry the quantized weights and the chain's scales so
+                # the fused block is executable without re-calibrating.
+                # In the deploy flow fusion runs before calibration and
+                # CompiledPipeline.calibrate derives these instead.
+                for src, nm in ((s_op, "ws"), (f_op, "wf"), (out_op, "wo")):
+                    fused.params[nm + "_q"] = src.params["w_q"]
+                    fused.params[nm + "_scale"] = src.params["w_scale"]
+                fused.attrs["in_scale"] = s_op.attrs["in_scale"]
+                fused.attrs["agg_scale"] = agg.attrs["act_scale"]
+                fused.attrs["h_scale"] = out_op.attrs["in_scale"]
+                if "act_scale" in out_op.attrs:
+                    fused.attrs["act_scale"] = out_op.attrs["act_scale"]
             out.add(fused)
             renamed[out_op.name] = fused.name
         elif op.name in drop:

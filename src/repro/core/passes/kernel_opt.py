@@ -111,6 +111,7 @@ def kernel_optimize(g: Graph, *, n_rows: int = 128, batch: int = 1,
     # heuristic; a miss leaves attrs_opt untouched → identical bindings)
     if tuning_cache is not None:
         from repro.tuning.cache import (flash_attention_key,
+                                        gravnet_block_int8_key,
                                         gravnet_block_key, gravnet_key)
         for op in g:
             if op.op_type != "gravnet_aggregate":
@@ -124,13 +125,22 @@ def kernel_optimize(g: Graph, *, n_rows: int = 128, batch: int = 1,
         # 1c. fused GravNet block: cache-only (bm, bn, bk) bindings —
         # the 5-dim batched key (batch, n, d_hidden, d_f, k); a miss
         # keeps the wrapper's bitwise-safe defaults (whole-operand
-        # epilogue, bm = min(n, 128))
+        # epilogue, bm = min(n, 128)). An int8 block keys with the
+        # dtype-tagged gravnet_block_int8 family — the quantized
+        # megakernel's winners never bind onto the f32 kernel or vice
+        # versa.
         for op in g:
             if op.op_type != "gravnet_block":
                 continue
-            tuned = tuning_cache.lookup(gravnet_block_key(
-                n_rows, op.attrs["d_hidden"], op.attrs["d_f"],
-                op.attrs["k"], "float32", backend, batch=batch))
+            if op.precision == "int8":
+                key = gravnet_block_int8_key(
+                    n_rows, op.attrs["d_hidden"], op.attrs["d_f"],
+                    op.attrs["k"], backend, batch=batch)
+            else:
+                key = gravnet_block_key(
+                    n_rows, op.attrs["d_hidden"], op.attrs["d_f"],
+                    op.attrs["k"], "float32", backend, batch=batch)
+            tuned = tuning_cache.lookup(key)
             if tuned is not None:
                 for knob in ("bm", "bn", "bk"):
                     if knob in tuned:

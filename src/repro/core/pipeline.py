@@ -105,7 +105,7 @@ class _Executor:
         elif t == "gravnet_aggregate":
             out = self._gravnet(op, vals, prec)
         elif t == "gravnet_block":
-            out = self._gravnet_block(op, vals)
+            out = self._gravnet_block(op, vals, prec)
         elif t == "attention":
             out = self._attention(op, vals)
         elif t == "cps":
@@ -195,16 +195,31 @@ class _Executor:
             agg = jnp.clip(jnp.round(agg / sc), -127, 127) * sc
         return agg
 
-    def _gravnet_block(self, op, vals):
+    def _gravnet_block(self, op, vals, prec="fp"):
         """One fused GravNet block — a single megakernel launch for the
-        whole micro-batch (fp path; the mixed-precision interior keeps
-        the unfused int8 chain, see ``deploy``)."""
+        whole micro-batch. A calibrated int8 block (``ws_q`` present)
+        launches the quantized megakernel with its baked scales; the fp
+        path (and any uncalibrated int8 block) runs the f32 kernel."""
         x, mask = vals
         p = op.params
         dh = p["ws"].shape[0]
         xf = _as_fp(x)[..., :dh]        # lane128-padded producer
         kw = {kn: op.attrs_opt[kn] for kn in ("bm", "bn", "bk")
               if kn in op.attrs_opt}
+        if prec == "int8" and "ws_q" in p:
+            # f32 in, f32 out: the kernel quantizes on entry with the
+            # producer's calibrated scale and dequantizes the epilogue,
+            # matching the unfused chain's boundary arithmetic exactly
+            return kops.gravnet_block_int8_batched(
+                xf, mask, p["ws_q"], p["bs"], p["wf_q"], p["bf"],
+                p["wo_q"], p["bo"], p["ws_scale"], p["wf_scale"],
+                p["wo_scale"], x_scale=op.attrs["in_scale"],
+                agg_scale=op.attrs["agg_scale"],
+                h_scale=op.attrs["h_scale"], k=op.attrs["k"],
+                scale=op.attrs["scale"],
+                activation=op.attrs.get("activation", "none"),
+                concat_x=op.attrs.get("concat_x", True),
+                backend=self.backend, **kw)
         return kops.gravnet_block_batched(
             xf, mask, p["ws"], p["bs"], p["wf"], p["bf"], p["wo"],
             p["bo"], k=op.attrs["k"], scale=op.attrs["scale"],
@@ -344,7 +359,7 @@ class CompiledPipeline:
         """Run fp over a calibration batch, set activation scales, quantize
         int8 weights (per-output-channel)."""
         record: dict[str, float] = {}
-        self._ex.run(feeds, force_fp=True, record=record)
+        _, env = self._ex.run(feeds, force_fp=True, record=record)
         for op in self.graph:
             if op.name in record:
                 op.attrs["act_scale"] = activation_scale(record[op.name])
@@ -355,7 +370,47 @@ class CompiledPipeline:
                     "act_scale", 1.0)
                 wq, ws = quantize_weight(op.params["w"])
                 op.params["w_q"], op.params["w_scale"] = wq, ws
+            elif (op.op_type == "gravnet_block"
+                  and op.precision == "int8"):
+                self._calibrate_block(op, env)
         self._build()  # re-close over updated params/attrs
+
+    def _calibrate_block(self, op, env):
+        """Derive the fused int8 block's baked activation scales from
+        the fp calibration run. The fused op hides the chain's interior
+        tensors from the recording pass, so the two interior scales are
+        recomputed here from the block's fp input via the same oracles
+        the unfused chain executes: ``in_scale`` is the producer's
+        recorded activation scale (quantizes x on kernel entry),
+        ``agg_scale`` the fp aggregate's absmax (the aggregate op's
+        snap in the unfused chain), and ``h_scale`` the absmax of
+        ``concat(x, agg)`` (the concat's scale, which the unfused
+        output dense quantizes with). Weights quantize per channel."""
+        from repro.kernels import ref as kref
+        a, p = op.attrs, op.params
+        prod = op.inputs[0]
+        a["in_scale"] = self.graph[prod].attrs.get("act_scale", 1.0)
+        dh = p["ws"].shape[0]
+        x = _as_fp(env[prod])[..., :dh]
+        mask = _as_fp(env[op.inputs[1]])
+        s = kref.fused_dense_ref(x, p["ws"], p["bs"], activation="none",
+                                 out_dtype=jnp.float32)
+        f = kref.fused_dense_ref(x, p["wf"], p["bf"], activation="none",
+                                 out_dtype=jnp.float32)
+
+        def agg_one(ss, ff, mm):
+            return kref.gravnet_aggregate_ref(ss, ff, mm, k=a["k"],
+                                              scale=a["scale"],
+                                              out_dtype=jnp.float32)
+
+        agg = (jax.vmap(agg_one)(s, f, mask) if x.ndim == 3
+               else agg_one(s, f, mask))
+        a["agg_scale"] = activation_scale(float(jnp.max(jnp.abs(agg))))
+        h = (jnp.concatenate([x, agg], axis=-1)
+             if a.get("concat_x", True) else agg)
+        a["h_scale"] = activation_scale(float(jnp.max(jnp.abs(h))))
+        for nm in ("ws", "wf", "wo"):
+            p[nm + "_q"], p[nm + "_scale"] = quantize_weight(p[nm])
 
     # inference -------------------------------------------------------------
     def __call__(self, feeds):
@@ -425,7 +480,8 @@ class CompiledPipeline:
 def deploy(model_graph: Graph, req: Requirements, *,
            calibration_feeds=None, kernel_backend: str | None = None,
            tuning_cache=None, batch: int = 1,
-           fuse_gravnet_block: bool = True) -> CompiledPipeline:
+           fuse_gravnet_block: bool = True,
+           fuse_int8: bool = True) -> CompiledPipeline:
     """Run the design flow and emit one executable.
 
     ``batch > 1`` emits a *batch-packed* executable: kernels are bound
@@ -439,10 +495,14 @@ def deploy(model_graph: Graph, req: Requirements, *,
     chain into one ``gravnet_block`` megakernel launch at design
     points ≥ 2. The fp path is bitwise-equal to the unfused chain
     (tested); ``False`` is the escape hatch and reproduces the legacy
-    graphs — and their tuning-cache keys — bit-for-bit. The mixed
-    precision policy always keeps the unfused chain (its interior is
-    the calibrated int8 dense pipeline, which the fp-arithmetic
-    megakernel would silently de-quantize)."""
+    graphs — and their tuning-cache keys — bit-for-bit. Under the
+    mixed precision policy the fused blocks run the *quantized*
+    megakernel: ``calibrate`` bakes the chain's activation scales into
+    the kernel and the block matches the unfused calibrated int8 chain
+    within calibration tolerance (tested). ``fuse_int8=False`` is the
+    int8-specific escape hatch — mixed deployments keep the legacy
+    unfused int8 dense chain and its tuning keys bit-for-bit while fp
+    deployments still fuse."""
     import os as _os
     backend = (kernel_backend or _os.environ.get("REPRO_BACKEND")
                or ("pallas" if req.platform == "tpu" else "xla"))
@@ -450,8 +510,13 @@ def deploy(model_graph: Graph, req: Requirements, *,
     verify(model_graph)  # legality check before any rewrite
     g = model_graph
     if req.design_point >= 2:
-        g = fuse(g, gravnet_block=(fuse_gravnet_block
-                                   and req.precision_policy != "mixed"))
+        # mixed precision fuses only when calibration data will arrive
+        # to bake the quantized megakernel's scales (an uncalibrated
+        # mixed deploy raises below anyway)
+        block = fuse_gravnet_block and (
+            req.precision_policy != "mixed"
+            or (fuse_int8 and calibration_feeds is not None))
+        g = fuse(g, gravnet_block=block)
         verify(g)        # fusion must preserve well-formedness
     g = partition(g, tpu_native_gravnet=req.tpu_native_gravnet)
     g = apply_precision_policy(
@@ -609,7 +674,8 @@ def deploy_bucketed(model_graph: Graph, req: Requirements, *,
                     calibration_feeds=None,
                     kernel_backend: str | None = None,
                     tuning_cache=None,
-                    fuse_gravnet_block: bool = True) -> BucketedPipeline:
+                    fuse_gravnet_block: bool = True,
+                    fuse_int8: bool = True) -> BucketedPipeline:
     """Run the design flow once per occupancy bucket.
 
     Each bucket b gets its own batch-packed executable deployed at
@@ -629,6 +695,7 @@ def deploy_bucketed(model_graph: Graph, req: Requirements, *,
         pipes[b] = deploy(model_graph, req_b, calibration_feeds=calib_b,
                           kernel_backend=kernel_backend,
                           tuning_cache=tuning_cache, batch=microbatch,
-                          fuse_gravnet_block=fuse_gravnet_block)
+                          fuse_gravnet_block=fuse_gravnet_block,
+                          fuse_int8=fuse_int8)
     return BucketedPipeline(pipes, microbatch=microbatch,
                             example_feeds=calibration_feeds)

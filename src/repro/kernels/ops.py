@@ -26,6 +26,8 @@ from repro.kernels.fused_dense import (fused_dense_batched_pallas,
 from repro.kernels.gravnet import (gravnet_aggregate_batched_pallas,
                                    gravnet_aggregate_pallas)
 from repro.kernels.gravnet_block import (gravnet_block_batched_pallas,
+                                         gravnet_block_int8_batched_pallas,
+                                         gravnet_block_int8_pallas,
                                          gravnet_block_pallas)
 
 
@@ -254,6 +256,81 @@ def gravnet_block_batched(x, mask, ws, bs, wf, bf, wo, bo, *, k=8,
                                      scale=scale, activation=activation,
                                      concat_x=concat_x, bm=bm, bn=bn,
                                      bk=bk, interpret=interpret)
+    return y[:, :n]
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "x_scale", "agg_scale", "h_scale", "k", "scale", "activation",
+    "concat_x", "bm", "bn", "bk", "out_dtype", "out_scale", "backend"))
+def gravnet_block_int8(x, mask, ws_q, bs, wf_q, bf, wo_q, bo, ws_scale,
+                       wf_scale, wo_scale, *, x_scale, agg_scale, h_scale,
+                       k=8, scale=10.0, activation="relu", concat_x=True,
+                       bm=None, bn=None, bk=None, out_dtype=jnp.float32,
+                       out_scale=1.0, backend="auto"):
+    """Quantized fused GravNet block (megakernel): VMEM requant → int8
+    S/F prologue → aggregation → int8 output-dense epilogue, one
+    launch. x:(N,dh) f32 activations, mask:(N,) → (N, d_out).
+
+    The calibrated per-tensor activation scales (``x_scale``,
+    ``agg_scale``, ``h_scale``) are static — baked into the kernel as
+    compile-time constants; int8 weights carry f32 per-output-channel
+    scale vectors."""
+    backend = _resolve(backend)
+    if backend == "xla":
+        return _ref.gravnet_block_int8_ref(
+            x, mask, ws_q, bs, wf_q, bf, wo_q, bo, ws_scale, wf_scale,
+            wo_scale, x_scale=x_scale, agg_scale=agg_scale,
+            h_scale=h_scale, k=k, scale=scale, activation=activation,
+            concat_x=concat_x, out_dtype=out_dtype, out_scale=out_scale)
+    interpret = backend == "pallas_interpret"
+    n = x.shape[0]
+    bm = bm or min(n, 128)
+    xp = _pad_to(x, bm, 0)
+    mp = _pad_to(mask.astype(jnp.float32), bm, 0)
+    (ws_q, bs, wf_q, bf, wo_q, bo, ws_scale, wf_scale,
+     wo_scale) = _gnblock_weight_barrier(ws_q, bs, wf_q, bf, wo_q, bo,
+                                         ws_scale, wf_scale, wo_scale)
+    y = gravnet_block_int8_pallas(
+        xp, mp, ws_q, bs, wf_q, bf, wo_q, bo, ws_scale, wf_scale,
+        wo_scale, x_scale=x_scale, agg_scale=agg_scale, h_scale=h_scale,
+        k=k, scale=scale, activation=activation, concat_x=concat_x,
+        bm=bm, bn=bn, bk=bk, out_dtype=out_dtype, out_scale=out_scale,
+        interpret=interpret)
+    return y[:n]
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "x_scale", "agg_scale", "h_scale", "k", "scale", "activation",
+    "concat_x", "bm", "bn", "bk", "out_dtype", "out_scale", "backend"))
+def gravnet_block_int8_batched(x, mask, ws_q, bs, wf_q, bf, wo_q, bo,
+                               ws_scale, wf_scale, wo_scale, *, x_scale,
+                               agg_scale, h_scale, k=8, scale=10.0,
+                               activation="relu", concat_x=True, bm=None,
+                               bn=None, bk=None, out_dtype=jnp.float32,
+                               out_scale=1.0, backend="auto"):
+    """Micro-batched quantized GravNet block — one launch per
+    micro-batch. x:(B,N,dh) f32, mask:(B,N) → (B, N, d_out)."""
+    backend = _resolve(backend)
+    if backend == "xla":
+        return _ref.gravnet_block_int8_ref(
+            x, mask, ws_q, bs, wf_q, bf, wo_q, bo, ws_scale, wf_scale,
+            wo_scale, x_scale=x_scale, agg_scale=agg_scale,
+            h_scale=h_scale, k=k, scale=scale, activation=activation,
+            concat_x=concat_x, out_dtype=out_dtype, out_scale=out_scale)
+    interpret = backend == "pallas_interpret"
+    n = x.shape[1]
+    bm = bm or min(n, 128)
+    xp = _pad_to(x, bm, 1)
+    mp = _pad_to(mask.astype(jnp.float32), bm, 1)
+    (ws_q, bs, wf_q, bf, wo_q, bo, ws_scale, wf_scale,
+     wo_scale) = _gnblock_weight_barrier(ws_q, bs, wf_q, bf, wo_q, bo,
+                                         ws_scale, wf_scale, wo_scale)
+    y = gravnet_block_int8_batched_pallas(
+        xp, mp, ws_q, bs, wf_q, bf, wo_q, bo, ws_scale, wf_scale,
+        wo_scale, x_scale=x_scale, agg_scale=agg_scale, h_scale=h_scale,
+        k=k, scale=scale, activation=activation, concat_x=concat_x,
+        bm=bm, bn=bn, bk=bk, out_dtype=out_dtype, out_scale=out_scale,
+        interpret=interpret)
     return y[:, :n]
 
 

@@ -139,6 +139,46 @@ def gravnet_block_ref(x, mask, ws, bs, wf, bf, wo, bo, *, k=8, scale=10.0,
                            out_dtype=out_dtype)
 
 
+def gravnet_block_int8_ref(x, mask, ws_q, bs, wf_q, bf, wo_q, bo, ws_scale,
+                           wf_scale, wo_scale, *, x_scale, agg_scale,
+                           h_scale, k=8, scale=10.0, activation="relu",
+                           concat_x=True, out_dtype=jnp.float32,
+                           out_scale=1.0):
+    """Oracle for the quantized megakernel: the *unfused calibrated
+    int8 chain*, composed from the same per-op oracles the mixed
+    executor dispatches — quantize x with the producer's ``x_scale``,
+    int8 S/F projections dequantized to f32 (no output snap, matching
+    the executor where the merged projection's retile consumers keep
+    its output f32), f32 aggregate snapped to the int8 grid with
+    ``agg_scale``, then the output dense quantizing ``concat(x, agg)``
+    with ``h_scale``. Accepts per-event (N, dh) or batched (B, N, dh)
+    f32 operands; weights are int8 with per-output-channel scales."""
+    xf = x.astype(jnp.float32)
+    xq = jnp.clip(jnp.round(xf / x_scale), -127.0, 127.0).astype(jnp.int8)
+    xsc = jnp.asarray(x_scale, jnp.float32)
+    lead = xq.shape[:-1]
+    xq2 = xq.reshape(-1, xq.shape[-1])
+    s = fused_dense_int8_ref(xq2, ws_q, bs, xsc, ws_scale,
+                             activation="none").reshape(*lead, -1)
+    f = fused_dense_int8_ref(xq2, wf_q, bf, xsc, wf_scale,
+                             activation="none").reshape(*lead, -1)
+
+    def agg_one(ss, ff, mm):
+        return gravnet_aggregate_ref(ss, ff, mm, k=k, scale=scale,
+                                     out_dtype=jnp.float32)
+
+    agg = (jax.vmap(agg_one)(s, f, mask) if x.ndim == 3
+           else agg_one(s, f, mask))
+    agg = jnp.clip(jnp.round(agg / agg_scale), -127.0, 127.0) * agg_scale
+    h = jnp.concatenate([xf, agg], axis=-1) if concat_x else agg
+    hq = jnp.clip(jnp.round(h / h_scale), -127.0, 127.0).astype(jnp.int8)
+    hq2 = hq.reshape(-1, hq.shape[-1])
+    y = fused_dense_int8_ref(hq2, wo_q, bo, jnp.asarray(h_scale, jnp.float32),
+                             wo_scale, activation=activation,
+                             out_dtype=out_dtype, out_scale=out_scale)
+    return y.reshape(*lead, y.shape[-1])
+
+
 # --------------------------------------------------------- flash attention ----
 def flash_attention_ref(q, k, v, *, causal=True):
     """Plain softmax attention oracle. q:(BH,S,D) k,v:(BH,T,D)."""

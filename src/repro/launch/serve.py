@@ -102,6 +102,12 @@ def main():
                          "aggregate→dense GravNet chains (legacy "
                          "graphs and tuning-cache keys, bit-for-bit) "
                          "instead of the fused megakernel")
+    ap.add_argument("--no-fuse-int8", action="store_true",
+                    help="int8-specific escape hatch: under "
+                         "--precision mixed, keep the legacy unfused "
+                         "calibrated int8 dense chain (and its tuning "
+                         "keys, bit-for-bit) instead of the quantized "
+                         "megakernel; fp deployments still fuse")
     args = ap.parse_args()
 
     if args.detector == "current":
@@ -163,12 +169,14 @@ def main():
                    "display_n": max(args.event_display_n, 64)} \
         if monitoring else False
     fuse_block = not args.no_fuse_gravnet_block
+    fuse_int8 = not args.no_fuse_int8
     if args.buckets:
         mb = args.bucket_microbatch
         bpipe = deploy_bucketed(graph, req, buckets=args.buckets,
                                 microbatch=mb, calibration_feeds=feeds,
                                 tuning_cache=cache,
-                                fuse_gravnet_block=fuse_block)
+                                fuse_gravnet_block=fuse_block,
+                                fuse_int8=fuse_int8)
         if args.tune:
             fresh = _tune_and_rebind(
                 cache, args,
@@ -177,7 +185,7 @@ def main():
                 lambda: deploy_bucketed(
                     graph, req, buckets=args.buckets, microbatch=mb,
                     calibration_feeds=feeds, tuning_cache=cache,
-                    fuse_gravnet_block=fuse_block))
+                    fuse_gravnet_block=fuse_block, fuse_int8=fuse_int8))
             if fresh is not None:
                 bpipe = fresh
         print(f"[serve] deployed design ③{args.design_point} "
@@ -191,13 +199,15 @@ def main():
               f"{sum(r.warmed for r in eng.replicas)}")
     else:
         pipe = deploy(graph, req, calibration_feeds=feeds,
-                      tuning_cache=cache, fuse_gravnet_block=fuse_block)
+                      tuning_cache=cache, fuse_gravnet_block=fuse_block,
+                      fuse_int8=fuse_int8)
         if args.tune:
             fresh = _tune_and_rebind(
                 cache, args, [(pipe.graph, cfg.n_hits, 1, pipe.backend)],
                 lambda: deploy(graph, req, calibration_feeds=feeds,
                                tuning_cache=cache,
-                               fuse_gravnet_block=fuse_block))
+                               fuse_gravnet_block=fuse_block,
+                               fuse_int8=fuse_int8))
             if fresh is not None:
                 pipe = fresh
         print(f"[serve] deployed design ③{args.design_point} "

@@ -20,14 +20,15 @@ from repro.tuning.autotune import (autotune_graph, graph_kernel_problems,
                                    tune_gravnet, tune_gravnet_block)
 from repro.tuning.cache import (SCHEMA_VERSION, KernelKey, TuningCache,
                                 TuningEntry, flash_attention_key,
-                                fused_dense_key, gravnet_block_key,
-                                gravnet_key)
+                                fused_dense_key, gravnet_block_int8_key,
+                                gravnet_block_key, gravnet_key)
 from repro.tuning.warmup import make_warmup, warm_from_cache
 
 __all__ = [
     "SCHEMA_VERSION", "KernelKey", "TuningCache", "TuningEntry",
     "autotune_graph", "flash_attention_key", "fused_dense_key",
-    "graph_kernel_problems", "gravnet_block_key", "gravnet_key",
-    "make_warmup", "tune_flash_attention", "tune_fused_dense",
-    "tune_gravnet", "tune_gravnet_block", "warm_from_cache",
+    "graph_kernel_problems", "gravnet_block_int8_key",
+    "gravnet_block_key", "gravnet_key", "make_warmup",
+    "tune_flash_attention", "tune_fused_dense", "tune_gravnet",
+    "tune_gravnet_block", "warm_from_cache",
 ]

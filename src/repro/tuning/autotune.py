@@ -30,8 +30,8 @@ import numpy as np
 
 from repro.tuning import candidates as cand
 from repro.tuning.cache import (KernelKey, TuningCache, flash_attention_key,
-                                fused_dense_key, gravnet_block_key,
-                                gravnet_key)
+                                fused_dense_key, gravnet_block_int8_key,
+                                gravnet_block_key, gravnet_key)
 
 MIN_GAIN = 0.03
 
@@ -175,46 +175,73 @@ def tune_gravnet_block(n: int, d_hidden: int, d_s: int, d_f: int,
     The 5-dim key carries (batch, n, d_hidden, d_f, k); the remaining
     block dims (d_s, d_out, activation, concat_x) are stored inside the
     cached config so serving warm-up can replay the exact problem —
-    ``kernel_opt`` only ever binds the (bm, bn, bk) knobs."""
+    ``kernel_opt`` only ever binds the (bm, bn, bk) knobs.
+    ``dtype="int8"`` tunes the quantized megakernel (int8 weights with
+    per-channel scales, representative baked activation scales) under
+    its own ``gravnet_block_int8`` key family."""
     import jax.numpy as jnp
 
     from repro.kernels import ops
     rng = np.random.default_rng(seed)
-    dt = _np_dtype(dtype)
     dcat = d_hidden + 2 * d_f if concat_x else 2 * d_f
-    ws = jnp.asarray(rng.normal(size=(d_hidden, d_s)) * 0.3, dt)
-    bs = jnp.asarray(rng.normal(size=(d_s,)), dt)
-    wf = jnp.asarray(rng.normal(size=(d_hidden, d_f)) * 0.3, dt)
-    bf = jnp.asarray(rng.normal(size=(d_f,)), dt)
-    wo = jnp.asarray(rng.normal(size=(dcat, d_out)) * 0.3, dt)
-    bo = jnp.asarray(rng.normal(size=(d_out,)), dt)
-    if batch > 1:
-        x = jnp.asarray(rng.normal(size=(batch, n, d_hidden)), dt)
-        mask = jnp.asarray(rng.uniform(size=(batch, n)) < 0.8, jnp.float32)
+    if dtype == "int8":
+        ws = jnp.asarray(rng.integers(-127, 128, size=(d_hidden, d_s)),
+                         jnp.int8)
+        wf = jnp.asarray(rng.integers(-127, 128, size=(d_hidden, d_f)),
+                         jnp.int8)
+        wo = jnp.asarray(rng.integers(-127, 128, size=(dcat, d_out)),
+                         jnp.int8)
+        bs = jnp.asarray(rng.normal(size=(d_s,)), jnp.float32)
+        bf = jnp.asarray(rng.normal(size=(d_f,)), jnp.float32)
+        bo = jnp.asarray(rng.normal(size=(d_out,)), jnp.float32)
+        wss = jnp.asarray(rng.uniform(1e-3, 5e-2, size=(d_s,)), jnp.float32)
+        wfs = jnp.asarray(rng.uniform(1e-3, 5e-2, size=(d_f,)), jnp.float32)
+        wos = jnp.asarray(rng.uniform(1e-3, 5e-2, size=(d_out,)),
+                          jnp.float32)
+        shape = (batch, n, d_hidden) if batch > 1 else (n, d_hidden)
+        x = jnp.asarray(rng.normal(size=shape), jnp.float32)
+        mshape = (batch, n) if batch > 1 else (n,)
+        mask = jnp.asarray(rng.uniform(size=mshape) < 0.8, jnp.float32)
+        fn = (ops.gravnet_block_int8_batched if batch > 1
+              else ops.gravnet_block_int8)
 
         def call(cfg):
-            return ops.gravnet_block_batched(
-                x, mask, ws, bs, wf, bf, wo, bo, k=k,
-                activation=activation, concat_x=concat_x,
-                backend=backend, **cfg)
+            return fn(x, mask, ws, bs, wf, bf, wo, bo, wss, wfs, wos,
+                      x_scale=0.02, agg_scale=0.01, h_scale=0.02, k=k,
+                      activation=activation, concat_x=concat_x,
+                      backend=backend, **cfg)
+
+        cands = cand.gravnet_block_int8_candidates(
+            n, d_hidden, d_f, d_out, concat_x=concat_x, batch=batch)
+        key = gravnet_block_int8_key(n, d_hidden, d_f, k, backend,
+                                     batch=batch)
     else:
-        x = jnp.asarray(rng.normal(size=(n, d_hidden)), dt)
-        mask = jnp.asarray(rng.uniform(size=(n,)) < 0.8, jnp.float32)
+        dt = _np_dtype(dtype)
+        ws = jnp.asarray(rng.normal(size=(d_hidden, d_s)) * 0.3, dt)
+        bs = jnp.asarray(rng.normal(size=(d_s,)), dt)
+        wf = jnp.asarray(rng.normal(size=(d_hidden, d_f)) * 0.3, dt)
+        bf = jnp.asarray(rng.normal(size=(d_f,)), dt)
+        wo = jnp.asarray(rng.normal(size=(dcat, d_out)) * 0.3, dt)
+        bo = jnp.asarray(rng.normal(size=(d_out,)), dt)
+        shape = (batch, n, d_hidden) if batch > 1 else (n, d_hidden)
+        x = jnp.asarray(rng.normal(size=shape), dt)
+        mshape = (batch, n) if batch > 1 else (n,)
+        mask = jnp.asarray(rng.uniform(size=mshape) < 0.8, jnp.float32)
+        fn = ops.gravnet_block_batched if batch > 1 else ops.gravnet_block
 
         def call(cfg):
-            return ops.gravnet_block(
-                x, mask, ws, bs, wf, bf, wo, bo, k=k,
-                activation=activation, concat_x=concat_x,
-                backend=backend, **cfg)
+            return fn(x, mask, ws, bs, wf, bf, wo, bo, k=k,
+                      activation=activation, concat_x=concat_x,
+                      backend=backend, **cfg)
 
-    cands = cand.gravnet_block_candidates(n, d_hidden, d_f, d_out,
-                                          concat_x=concat_x, batch=batch)
+        cands = cand.gravnet_block_candidates(
+            n, d_hidden, d_f, d_out, concat_x=concat_x, batch=batch)
+        key = gravnet_block_key(n, d_hidden, d_f, k, dtype, backend,
+                                batch=batch)
     if backend in _KNOB_INERT_BACKENDS:
         cands = cands[:1]
     timed = [(cfg, _time_call(lambda c=cfg: call(c), iters=iters))
              for cfg in cands]
-    key = gravnet_block_key(n, d_hidden, d_f, k, dtype, backend,
-                            batch=batch)
     best_cfg, best_t, default_t = _pick(timed, min_gain=min_gain)
     if cache is not None:
         cache.put(key, {**best_cfg, "d_s": d_s, "d_out": d_out,
@@ -273,9 +300,15 @@ def graph_kernel_problems(g, *, n_rows: int, backend: str,
                               op.attrs["k"], "float32", backend,
                               batch=batch)
         elif op.op_type == "gravnet_block":
-            key = gravnet_block_key(n_rows, op.attrs["d_hidden"],
-                                    op.attrs["d_f"], op.attrs["k"],
-                                    "float32", backend, batch=batch)
+            if op.precision == "int8":
+                key = gravnet_block_int8_key(n_rows, op.attrs["d_hidden"],
+                                             op.attrs["d_f"],
+                                             op.attrs["k"], backend,
+                                             batch=batch)
+            else:
+                key = gravnet_block_key(n_rows, op.attrs["d_hidden"],
+                                        op.attrs["d_f"], op.attrs["k"],
+                                        "float32", backend, batch=batch)
         elif op.op_type == "attention":
             # the executor launches one (B, N, d) flash call per
             # micro-batch: bh = the packed batch, s = t = n_rows
@@ -313,7 +346,7 @@ def autotune_graph(g, *, n_rows: int, backend: str, cache: TuningCache,
             tune_gravnet(n, d_s, d_f, k, batch=kb, dtype=key.dtype,
                          backend=backend, cache=cache, iters=iters,
                          min_gain=min_gain)
-        elif key.kernel == "gravnet_block":
+        elif key.kernel in ("gravnet_block", "gravnet_block_int8"):
             shape = key.shape
             kb = shape[0] if len(shape) == 5 else 1
             n, dh, d_f, k = shape[-4:]

@@ -91,6 +91,22 @@ def gravnet_block_key(n: int, d_hidden: int, d_f: int, k: int, dtype: str,
     return KernelKey("gravnet_block", (n, d_hidden, d_f, k), dtype, backend)
 
 
+def gravnet_block_int8_key(n: int, d_hidden: int, d_f: int, k: int,
+                           backend: str, batch: int = 1) -> KernelKey:
+    """Key for the *quantized* GravNet-block megakernel — a distinct
+    kernel family (``gravnet_block_int8|…|int8|backend``), not a dtype
+    variation of the f32 key: the int8 kernel has its own launch
+    surface (per-channel scale operands, baked requant constants) and
+    its own candidate space, so winners must never cross-pollinate.
+    Shape layout mirrors ``gravnet_block_key`` (5-dim batched, 4-dim
+    per-event)."""
+    if batch > 1:
+        return KernelKey("gravnet_block_int8",
+                         (batch, n, d_hidden, d_f, k), "int8", backend)
+    return KernelKey("gravnet_block_int8", (n, d_hidden, d_f, k), "int8",
+                     backend)
+
+
 def flash_attention_key(bh: int, s: int, t: int, d: int, dtype: str,
                         backend: str) -> KernelKey:
     return KernelKey("flash_attention", (bh, s, t, d), dtype, backend)

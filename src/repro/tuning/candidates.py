@@ -133,6 +133,38 @@ def gravnet_block_candidates(n: int, d_hidden: int, d_f: int, d_out: int,
     return _dedup_keep_order(cands)[:max_candidates]
 
 
+def default_gravnet_block_int8(n: int, batch: int = 1) -> dict:
+    """Heuristic default for the quantized block: identical launch
+    surface to the f32 megakernel (same row tile, whole-operand
+    epilogue), so the untuned int8 binding mirrors the untuned f32
+    one."""
+    return {"bm": min(n, 128)}
+
+
+def gravnet_block_int8_candidates(n: int, d_hidden: int, d_f: int,
+                                  d_out: int, *, concat_x: bool = True,
+                                  batch: int = 1,
+                                  max_candidates: int = 10) -> list[dict]:
+    """Search space for the quantized megakernel — the same (bm, bn,
+    bk) knobs as the f32 block, searched under its own dtype-tagged
+    key. One numerics difference widens the usable space: the epilogue
+    accumulates in int32, so even ``bk`` K-splits are *exact* (no
+    last-ulp caveat), and any measured winner is safe to bind."""
+    cands = [default_gravnet_block_int8(n, batch)]
+    for bm in _pow2_range(8, 512):
+        if n % bm == 0:        # the kernel asserts n % bm == 0
+            cands.append({"bm": bm})
+    bm0 = default_gravnet_block_int8(n, batch)["bm"]
+    dcat = d_hidden + 2 * d_f if concat_x else 2 * d_f
+    for bn in _pow2_range(32, 256):
+        if bn < d_out:
+            cands.append({"bm": bm0, "bn": bn})
+    for bk in _pow2_range(32, 256):
+        if bk < dcat:
+            cands.append({"bm": bm0, "bk": bk})
+    return _dedup_keep_order(cands)[:max_candidates]
+
+
 def default_flash_attention() -> dict:
     return {"bq": 128, "bk": 128}
 

@@ -4,6 +4,7 @@ import jax
 import jax.numpy as jnp
 import pytest
 from _hypothesis_support import given, settings, st
+from _numerics import assert_close, tolerance
 
 from repro.kernels import ops, ref
 
@@ -24,10 +25,8 @@ def test_fused_dense_sweep(m, k, n, dtype, variant):
     got = ops.fused_dense(x, w, b, variant=variant,
                           backend="pallas_interpret", bm=32, bn=32, bk=32)
     want = ref.fused_dense_ref(x, w, b)
-    tol = 1e-5 if dtype == jnp.float32 else 2e-2
-    np.testing.assert_allclose(np.asarray(got, np.float32),
-                               np.asarray(want, np.float32),
-                               rtol=tol, atol=tol * 10)
+    rt, _ = tolerance(dtype)
+    assert_close(got, want, rtol=rt, atol=rt * 10)
 
 
 @pytest.mark.parametrize("activation", ["relu", "gelu", "silu", "none"])
@@ -37,8 +36,7 @@ def test_fused_dense_activations(activation):
     got = ops.fused_dense(x, w, None, activation=activation,
                           backend="pallas_interpret", bm=16, bn=16, bk=16)
     want = ref.fused_dense_ref(x, w, None, activation=activation)
-    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
-                               rtol=1e-5, atol=1e-5)
+    assert_close(got, want, dtype=jnp.float32)
 
 
 @pytest.mark.parametrize("m,k,n", [(32, 64, 32), (64, 96, 40), (17, 33, 9)])
@@ -56,9 +54,7 @@ def test_fused_dense_int8_sweep(m, k, n, out_dtype):
     want = ref.fused_dense_int8_ref(xq, wq, b, xs, ws, out_dtype=out_dtype,
                                     out_scale=0.1)
     # int8 x int8 -> int32 accumulation is exact; epilogue is elementwise.
-    np.testing.assert_allclose(np.asarray(got, np.float64),
-                               np.asarray(want, np.float64), rtol=1e-6,
-                               atol=1e-6)
+    assert_close(got, want, dtype="int8")
 
 
 def test_fused_dense_matches_unfused():
@@ -69,8 +65,7 @@ def test_fused_dense_matches_unfused():
     fused = ops.fused_dense(x, w, b, backend="pallas_interpret", bm=32,
                             bn=8, bk=32)
     unfused = jax.nn.relu(x @ w + b)
-    np.testing.assert_allclose(np.asarray(fused), np.asarray(unfused),
-                               rtol=1e-5, atol=1e-5)
+    assert_close(fused, unfused, dtype=jnp.float32)
 
 
 @settings(max_examples=25, deadline=None)
@@ -83,8 +78,7 @@ def test_fused_dense_property_padding_invariant(m, k, n, seed):
     got = ops.fused_dense(x, w, None, backend="pallas_interpret",
                           bm=16, bn=16, bk=16)
     want = ref.fused_dense_ref(x, w, None)
-    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
-                               rtol=1e-5, atol=1e-5)
+    assert_close(got, want, dtype=jnp.float32)
 
 
 @settings(max_examples=15, deadline=None)

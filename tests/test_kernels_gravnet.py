@@ -3,6 +3,7 @@ import numpy as np
 import jax.numpy as jnp
 import pytest
 from _hypothesis_support import given, settings, st
+from _numerics import assert_bitwise, assert_close
 
 from repro.kernels import ops, ref
 
@@ -24,8 +25,7 @@ def test_gravnet_sweep(n, ds, df, k):
     got = ops.gravnet_aggregate(s, f, mask, k=k, backend="pallas_interpret",
                                 bm=32)
     want = ref.gravnet_aggregate_ref(s, f, mask, k=k)
-    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
-                               rtol=1e-5, atol=1e-5)
+    assert_close(got, want, dtype=jnp.float32)
 
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
@@ -36,10 +36,7 @@ def test_gravnet_dtypes(dtype):
                                 backend="pallas_interpret", bm=32)
     want = ref.gravnet_aggregate_ref(s.astype(dtype), f.astype(dtype), mask,
                                      k=8)
-    tol = 1e-5 if dtype == jnp.float32 else 3e-2
-    np.testing.assert_allclose(np.asarray(got, np.float32),
-                               np.asarray(want, np.float32),
-                               rtol=tol, atol=tol)
+    assert_close(got, want, dtype=dtype)
 
 
 def test_gravnet_all_invalid_rows_zero():
@@ -48,7 +45,7 @@ def test_gravnet_all_invalid_rows_zero():
     mask = jnp.zeros(32, jnp.float32)
     got = ops.gravnet_aggregate(s, f, mask, k=4, backend="pallas_interpret",
                                 bm=32)
-    np.testing.assert_array_equal(np.asarray(got), 0.0)
+    assert_bitwise(got, np.zeros_like(np.asarray(got)))
 
 
 def test_gravnet_single_valid_node_has_no_neighbors():
@@ -57,7 +54,7 @@ def test_gravnet_single_valid_node_has_no_neighbors():
     mask = jnp.zeros(32, jnp.float32).at[5].set(1.0)
     got = np.asarray(ops.gravnet_aggregate(s, f, mask, k=4,
                                            backend="pallas_interpret", bm=32))
-    np.testing.assert_array_equal(got[5], 0.0)  # self excluded -> nothing
+    assert_bitwise(got[5], np.zeros_like(got[5]))  # self excluded -> nothing
 
 
 @settings(max_examples=20, deadline=None)
@@ -69,8 +66,7 @@ def test_gravnet_property_matches_oracle(n, k, seed):
     got = ops.gravnet_aggregate(s, f, mask, k=k, backend="pallas_interpret",
                                 bm=16)
     want = ref.gravnet_aggregate_ref(s, f, mask, k=k)
-    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
-                               rtol=1e-4, atol=1e-4)
+    assert_close(got, want, rtol=1e-4, atol=1e-4)
 
 
 @settings(max_examples=10, deadline=None)
@@ -86,7 +82,7 @@ def test_gravnet_property_padding_rows_inert(seed):
     m2 = jnp.concatenate([mask, jnp.zeros(16, jnp.float32)])
     ext = np.asarray(ops.gravnet_aggregate(s2, f2, m2, k=4,
                                            backend="pallas_interpret", bm=16))
-    np.testing.assert_allclose(ext[:48], base, rtol=1e-5, atol=1e-5)
+    assert_close(ext[:48], base, dtype=jnp.float32)
 
 
 @settings(max_examples=10, deadline=None)
@@ -99,7 +95,7 @@ def test_gravnet_property_permutation_equivariant(seed):
     base = np.asarray(ref.gravnet_aggregate_ref(s, f, mask, k=5))
     permd = np.asarray(ref.gravnet_aggregate_ref(s[perm], f[perm], mask[perm],
                                                  k=5))
-    np.testing.assert_allclose(permd, base[perm], rtol=1e-5, atol=1e-5)
+    assert_close(permd, base[perm], dtype=jnp.float32)
 
 
 def test_gravnet_weights_decay_with_distance():
@@ -115,4 +111,4 @@ def test_gravnet_weights_decay_with_distance():
     # removing the far cluster entirely must not change it
     out_near_only = np.asarray(ref.gravnet_aggregate_ref(
         s[:16], f[:16], mask[:16], k=20))
-    np.testing.assert_allclose(out[:16], out_near_only, rtol=1e-3, atol=1e-4)
+    assert_close(out[:16], out_near_only, rtol=1e-3, atol=1e-4)

@@ -1,0 +1,163 @@
+"""Property-based tests for ``repro.core.quantization`` — the
+algebraic contracts the quantized megakernel's calibration rests on.
+
+The fused int8 block bakes ``activation_scale`` outputs as kernel
+constants and ships ``quantize_weight`` results as operands, so these
+invariants (idempotence, range clamps, round-trip bounds, STE
+pass-through) are load-bearing for the deployed numerics, not just
+QAT. Each property runs as a hypothesis test when hypothesis is
+installed (``_hypothesis_support`` degrades them to skips otherwise)
+plus a deterministic seed sweep that always executes.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_support import given, settings, st
+from _numerics import assert_bitwise, assert_close
+
+from repro.core.quantization import (activation_scale, fake_quant,
+                                     quantize_weight)
+
+
+def _rand(seed, shape=(64,), spread=3.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=shape) * spread, jnp.float32)
+
+
+# ----------------------------------------------------------- fake_quant ----
+def _check_idempotent(x, scale):
+    once = fake_quant(x, scale=scale)
+    twice = fake_quant(once, scale=scale)
+    # grid points are fixed points: q*s/s re-rounds to exactly q
+    assert_bitwise(twice, once, context="fake_quant idempotence")
+
+
+def _check_range_and_grid(x, scale, bits=8):
+    qmax = 2.0 ** (bits - 1) - 1.0
+    y = np.asarray(fake_quant(x, scale=scale, bits=bits), np.float64)
+    assert np.max(np.abs(y)) <= qmax * scale * (1 + 1e-6), \
+        "output escapes the clamp range"
+    steps = y / float(scale)
+    assert np.max(np.abs(steps - np.round(steps))) < 1e-3, \
+        "output is off the quantization grid"
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+@pytest.mark.parametrize("scale", [0.004, 0.02, 0.3])
+def test_fake_quant_idempotent_and_clamped(seed, scale):
+    x = _rand(seed)
+    _check_idempotent(x, scale)
+    _check_range_and_grid(x, scale)
+
+
+def test_fake_quant_auto_scale_covers_absmax():
+    """Without an explicit scale the absmax sample maps to the top
+    grid step, so the clamp never clips calibration data."""
+    x = _rand(9)
+    y = fake_quant(x)
+    assert_close(jnp.max(jnp.abs(y)), jnp.max(jnp.abs(x)), rtol=1e-5,
+                 atol=1e-7)
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       scale=st.floats(1e-4, 1.0, allow_nan=False, allow_infinity=False))
+def test_fake_quant_property_idempotent(seed, scale):
+    x = _rand(seed)
+    _check_idempotent(x, scale)
+    _check_range_and_grid(x, scale)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), bits=st.integers(2, 8))
+def test_fake_quant_property_bitwidth_clamp(seed, bits):
+    x = _rand(seed, spread=10.0)
+    _check_range_and_grid(x, 0.05, bits=bits)
+
+
+# --------------------------------------------------------- STE gradient ----
+def test_ste_gradient_passes_through_in_range():
+    """QAT contract: inside the clamp the quantizer is gradient-
+    transparent (d fake_quant/dx == 1), outside it the clip zeroes the
+    gradient — with an explicit, non-clipping scale both regimes are
+    exact up to one f32 rounding of scale * (1/scale)."""
+    x = jnp.asarray([-1.5, -0.3, 0.0, 0.4, 1.2], jnp.float32)
+    scale = 0.02    # qmax*scale = 2.54 > max|x|: nothing clips
+    g = jax.grad(lambda v: jnp.sum(fake_quant(v, scale=scale)))(x)
+    assert_close(g, jnp.ones_like(x), rtol=1e-6, atol=1e-6)
+    far = jnp.asarray([5.0, -7.0], jnp.float32)     # beyond the clamp
+    g_far = jax.grad(lambda v: jnp.sum(fake_quant(v, scale=scale)))(far)
+    assert_bitwise(g_far, jnp.zeros_like(far))
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_ste_gradient_property_in_range(seed):
+    x = _rand(seed, spread=1.0)
+    scale = float(jnp.max(jnp.abs(x))) / 100.0 + 1e-6   # nothing clips
+    g = jax.grad(lambda v: jnp.sum(fake_quant(v, scale=scale)))(x)
+    assert_close(g, jnp.ones_like(x), rtol=1e-6, atol=1e-6)
+
+
+# ------------------------------------------------------ quantize_weight ----
+def _check_weight_roundtrip(w):
+    w_q, scale = quantize_weight(w)
+    assert w_q.dtype == jnp.int8 and scale.dtype == jnp.float32
+    q = np.asarray(w_q, np.float64)
+    assert np.all(np.abs(q) <= 127)
+    s = np.asarray(scale, np.float64)
+    assert np.all(s > 0)
+    # per-output-channel round-trip error is at most half a step
+    err = np.abs(q * s[None, :] - np.asarray(w, np.float64))
+    assert np.all(err <= s[None, :] * 0.5 + 1e-7), \
+        f"round-trip error {err.max():.3e} exceeds scale/2"
+
+
+@pytest.mark.parametrize("seed", [0, 5, 17])
+def test_quantize_weight_roundtrip(seed):
+    _check_weight_roundtrip(_rand(seed, shape=(24, 10), spread=0.4))
+
+
+def test_quantize_weight_tiny_column_floor():
+    """An all-zero column hits the 1e-8 scale floor instead of
+    dividing by zero, and round-trips to exact zeros."""
+    w = jnp.zeros((8, 3), jnp.float32).at[:, 1].set(0.25)
+    w_q, scale = quantize_weight(w)
+    assert float(scale[0]) > 0 and float(scale[2]) > 0
+    assert_bitwise(w_q[:, 0], jnp.zeros(8, jnp.int8))
+    _check_weight_roundtrip(w)
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       din=st.integers(1, 32), dout=st.integers(1, 16))
+def test_quantize_weight_property_roundtrip(seed, din, dout):
+    _check_weight_roundtrip(_rand(seed, shape=(din, dout), spread=0.5))
+
+
+# ----------------------------------------------------- activation_scale ----
+def test_activation_scale_monotone_with_floor():
+    """Larger calibration absmax never shrinks the scale, and the
+    1e-8 floor keeps degenerate (all-zero) calibration data from
+    producing a zero or negative scale."""
+    xs = [0.0, 1e-12, 1e-8, 1e-3, 0.5, 3.0, 1e4]
+    scales = [activation_scale(v) for v in xs]
+    assert all(s > 0 for s in scales)
+    assert all(a <= b + 1e-18 for a, b in zip(scales, scales[1:]))
+    assert scales[0] == scales[1] == activation_scale(1e-9)  # floored
+
+
+@settings(max_examples=40, deadline=None)
+@given(a=st.floats(0, 1e6, allow_nan=False, allow_infinity=False),
+       b=st.floats(0, 1e6, allow_nan=False, allow_infinity=False))
+def test_activation_scale_property_monotone(a, b):
+    lo, hi = sorted((a, b))
+    assert 0 < activation_scale(lo) <= activation_scale(hi)
+
+
+def test_activation_scale_maps_absmax_to_top_step():
+    """The scale maps the observed absmax onto the top int8 step, so a
+    calibrated tensor quantizes without clipping: absmax/scale = 127."""
+    for absmax in (0.01, 0.7, 42.0):
+        assert abs(absmax / activation_scale(absmax) - 127.0) < 1e-3
