@@ -11,6 +11,8 @@ Prints ``name,us_per_call,derived`` CSV rows.
                 buckets (the occupancy-bucketed serving path)
   fusion_*    — fused GravNet-block megakernel vs the unfused
                 dense→aggregate→dense chain (launch-count fusion)
+  latency     — open-loop p50/p95/p99 serving latency, streaming vs
+                deadline replica loop, with the p99 SLO gate enforced
 
 A failing section is still reported as a ``name,nan,ERROR ...`` row (so
 one broken figure never hides the others), but the run exits nonzero —
@@ -62,13 +64,16 @@ _SCORES = {
                               if p["microbatch"] >= 8),
     "fusion": lambda r: min(min(p["block_speedup"], p["int8_speedup"])
                             for p in r if p["microbatch"] >= 8),
+    # p99 speedup of the streaming loop over the deadline loop
+    "latency": lambda r: (r["loops"]["deadline"]["p99_us"]
+                          / r["loops"]["streaming"]["p99_us"]),
 }
 
 
 def main(argv: list[str] | None = None) -> int:
     from benchmarks import (batching, design_points, fusion, kernels_bench,
                             parallelization_sweep, resource_table,
-                            roofline, tuning_bench)
+                            roofline, serving_latency, tuning_bench)
     argv = sys.argv[1:] if argv is None else argv
     print("name,us_per_call,derived")
     only = argv[0] if argv else None
@@ -82,6 +87,10 @@ def main(argv: list[str] | None = None) -> int:
         "tuning": tuning_bench.run,
         "batching": batching.run,
         "fusion": fusion.run,
+        # check=True: a missed p99 SLO raises, so the section reports
+        # failed and the run exits nonzero
+        "latency": lambda: serving_latency.run(
+            os.path.join(_REPO, "BENCH_latency.json"), check=True),
     }
     if only is not None and only not in sections:
         print(f"unknown section {only!r}; have: {', '.join(sections)}",

@@ -1,0 +1,283 @@
+"""Open-loop serving-latency benchmark: tail latency at fixed offered
+load — the trigger-system SLO the paper's 7.15 µs figure represents.
+
+Throughput alone cannot gate a trigger runtime: the paper's number is
+an end-to-end *latency* budget sustained under continuous load.  This
+benchmark drives the sharded service with an **open-loop** generator —
+events are submitted on a fixed schedule (``offered`` events/s),
+independent of completions, and each event's latency is measured from
+its *scheduled* arrival time, so a backed-up service cannot hide its
+tail by slowing the generator (no coordinated omission).
+
+Both replica loops run against the same synthetic fixed-service-time
+lane (a GIL-releasing sleep per launch, like a real device dispatch),
+so the measured difference is purely the serving layer:
+
+  deadline  — the original micro-batch loop: an event waits for the
+              batch to fill or the window deadline to expire;
+  streaming — the persistent dataflow pipeline: rolling batching, an
+              arriving event joins the next in-flight launch.
+
+Writes ``BENCH_latency.json`` with p50/p95/p99 end-to-end latency and
+achieved events/s per loop.  ``--check`` enforces the SLO gate CI runs
+on every PR: at the fixed offered load, streaming p99 must be at most
+``--max-p99-ratio`` (default 0.75×) of the deadline p99, at
+equal-or-better achieved events/s.
+
+Usage:
+    PYTHONPATH=src python benchmarks/serving_latency.py \
+        --out BENCH_latency.json --check
+    PYTHONPATH=src python -m benchmarks.run latency
+"""
+from __future__ import annotations
+
+import argparse
+import gc
+import json
+import os
+import sys
+import threading
+import time
+
+import numpy as np
+
+if __package__ in (None, ""):   # script invocation: put repo root first
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+
+from repro.serving import ShardedTriggerService
+
+# defaults sized for CI: ~1.2 s of streamed traffic per loop flavor,
+# comfortably below the synthetic lane's capacity so the gate measures
+# loop latency, not saturation behavior.
+OFFERED_EV_S = 2000.0
+EVENTS = 2400
+MICROBATCH = 16
+SERVICE_US = 1500.0
+WINDOW_MS = 6.0
+MAX_P99_RATIO = 0.75
+ATTEMPTS = 3
+
+
+def synthetic_infer(service_us: float):
+    """Fixed-service-time lane (releases the GIL like a device
+    dispatch), then a trivial numpy decision so the result is
+    event-shaped."""
+
+    def infer(feeds):
+        time.sleep(service_us * 1e-6)
+        x = feeds["hits"]
+        energy = x.sum(axis=tuple(range(1, x.ndim)))
+        return {"trigger": energy > 0.0, "energy": energy}
+
+    return infer
+
+
+def _pct(xs, p):
+    return float(np.percentile(np.asarray(xs, float), p))
+
+
+def run_loop(loop: str, *, offered_ev_s: float, events: int,
+             microbatch: int, service_us: float, window_ms: float,
+             inflight: int = 2) -> dict:
+    """Stream ``events`` through one service at the offered rate and
+    return client-side latency percentiles + achieved throughput."""
+    import jax  # noqa: F401 — pay the lazy import before timing starts
+
+    infer = synthetic_infer(service_us)
+    svc = ShardedTriggerService(infer, n_replicas=1,
+                                microbatch=microbatch,
+                                window_s=window_ms * 1e-3, devices=None,
+                                inflight=inflight, loop=loop)
+    event = {"hits": np.ones((32, 4), np.float32)}
+    # warm the lane (thread ramp-up, ring allocation, first-launch
+    # paths) outside the measured window
+    warm = [svc.submit(dict(event)) for _ in range(2 * microbatch)]
+    for f in warm:
+        f.result(timeout=60)
+    svc.drain()
+
+    done_at = [0.0] * events
+    done_evt = threading.Event()
+    remaining = [events]
+    lock = threading.Lock()
+
+    def make_cb(i):
+        def cb(_fut):
+            done_at[i] = time.perf_counter()
+            with lock:
+                remaining[0] -= 1
+                if not remaining[0]:
+                    done_evt.set()
+        return cb
+
+    interarrival = 1.0 / offered_ev_s
+    sched = [0.0] * events
+    futs = []
+    # A CPython gen-2 collection stalls every thread for tens (observed:
+    # hundreds) of ms — two orders of magnitude above the latencies
+    # under test, hitting whichever loop it lands on. Collect up front,
+    # then keep the collector out of the measured window (both loops
+    # get identical treatment; a production trigger host would pin the
+    # collector the same way).
+    gc_was_enabled = gc.isenabled()
+    gc.collect()
+    gc.disable()
+    try:
+        t0 = time.perf_counter() + 5 * interarrival
+        for i in range(events):
+            target = t0 + i * interarrival
+            now = time.perf_counter()
+            if target > now:
+                time.sleep(target - now)
+            # open loop: latency counts from the *scheduled* arrival,
+            # so generator lag and submit-side backpressure are charged
+            # to the service, never hidden.
+            sched[i] = target
+            fut = svc.submit(event)
+            fut.add_done_callback(make_cb(i))
+            futs.append(fut)
+        completed = done_evt.wait(timeout=120)
+    finally:
+        if gc_was_enabled:
+            gc.enable()
+    assert completed, "latency run did not complete"
+    failed = sum(1 for f in futs if f.exception() is not None)
+    svc.drain()
+    agg = svc.stats.summary()
+    svc.close()
+
+    lats = [done_at[i] - sched[i] for i in range(events)]
+    wall = max(done_at) - t0
+    return {
+        "loop": loop,
+        "events": events,
+        "failed": failed,
+        "offered_ev_s": offered_ev_s,
+        "achieved_ev_s": events / wall,
+        "p50_us": _pct(lats, 50) * 1e6,
+        "p95_us": _pct(lats, 95) * 1e6,
+        "p99_us": _pct(lats, 99) * 1e6,
+        "mean_us": float(np.mean(lats)) * 1e6,
+        "batches": agg["batches"],
+        "mean_batch_fill": events / max(agg["batches"], 1),
+        "budget": agg["budget"],
+    }
+
+
+def _measure_pair(*, offered_ev_s, events, microbatch, service_us,
+                  window_ms) -> dict:
+    """One paired A/B measurement (both loops back to back, so they
+    see the same host conditions)."""
+    loops = {}
+    print("loop,p50_us,p95_us,p99_us,achieved_ev_s,mean_batch_fill")
+    for loop in ("deadline", "streaming"):
+        r = run_loop(loop, offered_ev_s=offered_ev_s, events=events,
+                     microbatch=microbatch, service_us=service_us,
+                     window_ms=window_ms)
+        loops[loop] = r
+        print(f"{loop},{r['p50_us']:.0f},{r['p95_us']:.0f},"
+              f"{r['p99_us']:.0f},{r['achieved_ev_s']:.0f},"
+              f"{r['mean_batch_fill']:.1f}")
+    return loops
+
+
+def run(out_path: str | None = None, *, check: bool = False,
+        offered_ev_s: float = OFFERED_EV_S, events: int = EVENTS,
+        microbatch: int = MICROBATCH, service_us: float = SERVICE_US,
+        window_ms: float = WINDOW_MS,
+        max_p99_ratio: float = MAX_P99_RATIO,
+        attempts: int = ATTEMPTS) -> dict:
+    """A/B at fixed offered load; raises RuntimeError when ``check``
+    is set and the streaming loop misses the SLO gate.
+
+    A shared CI runner occasionally stalls the whole process for
+    hundreds of ms (CPU contention — the collector is already pinned
+    during the window); at ~1.3x capacity headroom one such stall
+    backs the pipeline up for the rest of the run and poisons every
+    percentile.  A failed attempt is therefore retried as a fresh
+    *paired* A/B (up to ``attempts``): a real loop regression fails
+    every pair, host noise doesn't.
+    """
+    trials = []
+    for attempt in range(max(attempts, 1)):
+        if attempt:
+            print(f"[serving_latency] gate missed, retrying "
+                  f"(attempt {attempt + 1}/{attempts})")
+        loops = _measure_pair(offered_ev_s=offered_ev_s, events=events,
+                              microbatch=microbatch,
+                              service_us=service_us, window_ms=window_ms)
+        d, s = loops["deadline"], loops["streaming"]
+        ratio = s["p99_us"] / d["p99_us"]
+        # 2% measurement-jitter allowance on "equal-or-better"
+        # throughput; both loops complete the same open-loop schedule,
+        # so achieved rates only differ by tail-drain time.
+        tp_ok = s["achieved_ev_s"] >= 0.98 * d["achieved_ev_s"]
+        gate_ok = (ratio <= max_p99_ratio and tp_ok
+                   and not d["failed"] and not s["failed"])
+        trials.append({"p99_ratio": ratio, "pass": gate_ok})
+        if gate_ok:
+            break
+    result = {
+        "mode": "synthetic",
+        "offered_ev_s": offered_ev_s,
+        "events": events,
+        "microbatch": microbatch,
+        "service_us": service_us,
+        "window_ms": window_ms,
+        "loops": loops,
+        "p99_ratio_streaming_vs_deadline": ratio,
+        "check": {"max_p99_ratio": max_p99_ratio,
+                  "throughput_equal_or_better": tp_ok,
+                  "attempts": trials,
+                  "pass": gate_ok},
+    }
+    if out_path:
+        with open(out_path, "w") as f:
+            json.dump(result, f, indent=1)
+            f.write("\n")
+        print(f"[serving_latency] wrote {out_path}")
+    print(f"[serving_latency] p99 streaming/deadline = "
+          f"{s['p99_us']:.0f}/{d['p99_us']:.0f} us "
+          f"(ratio {ratio:.2f}, gate <= {max_p99_ratio}), throughput "
+          f"{s['achieved_ev_s']:.0f} vs {d['achieved_ev_s']:.0f} ev/s")
+    if check and not gate_ok:
+        raise RuntimeError(
+            f"serving_latency SLO gate failed: p99 ratio {ratio:.2f} "
+            f"(limit {max_p99_ratio}), throughput ok={tp_ok}, "
+            f"failed events deadline={d['failed']} "
+            f"streaming={s['failed']}")
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--offered", type=float, default=OFFERED_EV_S,
+                    help="open-loop offered load, events/s")
+    ap.add_argument("--events", type=int, default=EVENTS)
+    ap.add_argument("--microbatch", type=int, default=MICROBATCH)
+    ap.add_argument("--service-us", type=float, default=SERVICE_US,
+                    help="synthetic per-launch service time")
+    ap.add_argument("--window-ms", type=float, default=WINDOW_MS,
+                    help="deadline-loop batching window")
+    ap.add_argument("--max-p99-ratio", type=float, default=MAX_P99_RATIO,
+                    help="--check fails unless streaming p99 <= this "
+                         "fraction of the deadline p99")
+    ap.add_argument("--attempts", type=int, default=ATTEMPTS,
+                    help="paired A/B retries before the gate fails "
+                         "(rides out one-off host stalls)")
+    ap.add_argument("--out", default="/tmp/serving_latency.json")
+    ap.add_argument("--check", action="store_true",
+                    help="enforce the p99 SLO gate")
+    args = ap.parse_args()
+    try:
+        run(args.out, check=args.check, offered_ev_s=args.offered,
+            events=args.events, microbatch=args.microbatch,
+            service_us=args.service_us, window_ms=args.window_ms,
+            max_p99_ratio=args.max_p99_ratio, attempts=args.attempts)
+    except RuntimeError as e:
+        raise SystemExit(str(e))
+
+
+if __name__ == "__main__":
+    main()

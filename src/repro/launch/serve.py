@@ -14,6 +14,11 @@ display written through the shared ``event_display`` helper.
 executable per n_hits tier (``deploy_bucketed``), each event dispatched
 to the smallest bucket that fits its non-zero hit count, every bucket
 pre-compiled before traffic — see docs/architecture.md.
+
+Replicas run the persistent **streaming dataflow loop** by default
+(rolling batching into preallocated rings, no deadline tick);
+``--loop deadline`` is the escape hatch reproducing the original
+micro-batch deadline loop exactly — see docs/serving.md.
 """
 from __future__ import annotations
 
@@ -77,6 +82,14 @@ def main():
     ap.add_argument("--replicas", type=int, default=1,
                     help="serving replicas (thread-backed on one "
                          "device, device-placed when several exist)")
+    ap.add_argument("--loop", choices=["streaming", "deadline"],
+                    default="streaming",
+                    help="replica hot loop: 'streaming' (default) runs "
+                         "the persistent dataflow pipeline — rolling "
+                         "batching into preallocated rings, no "
+                         "deadline tick; 'deadline' is the escape "
+                         "hatch reproducing the original micro-batch "
+                         "deadline loop exactly")
     ap.add_argument("--policy", default="round_robin",
                     choices=["round_robin", "least_loaded"])
     ap.add_argument("--buckets", type=int, nargs="+", default=None,
@@ -194,7 +207,7 @@ def main():
         eng = ShardedTriggerService(
             buckets=bpipe, n_replicas=args.replicas, microbatch=mb,
             window_s=2e-3, hedge_after_s=None, policy=args.policy,
-            monitor=monitor_cfg)
+            monitor=monitor_cfg, loop=args.loop)
         print(f"[serve] bucket executables pre-compiled at startup: "
               f"{sum(r.warmed for r in eng.replicas)}")
     else:
@@ -229,7 +242,7 @@ def main():
             infer, n_replicas=args.replicas,
             microbatch=max(pipe.microbatch, 16), window_s=2e-3,
             hedge_after_s=None, policy=args.policy, warmup_fn=warmup_fn,
-            monitor=monitor_cfg)
+            monitor=monitor_cfg, loop=args.loop)
         if warmup_fn is not None:
             print(f"[serve] replicas warmed "
                   f"{sum(r.warmed for r in eng.replicas)} cached kernel "
@@ -257,7 +270,8 @@ def main():
     fake = float((trig & ~truth).sum() / max((~truth).sum(), 1))
     print(f"[serve] {args.events} events in {dt:.2f}s -> "
           f"{args.events / dt:,.0f} ev/s (CPU, "
-          f"{args.replicas} replica(s), {args.policy})")
+          f"{args.replicas} replica(s), {args.policy}, "
+          f"{args.loop} loop)")
     print(f"[serve] latency p50={s['p50_us']:.0f}us "
           f"p99={s['p99_us']:.0f}us batches={s['batches']}")
     bud = s["budget"]

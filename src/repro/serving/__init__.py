@@ -8,9 +8,11 @@ from repro.serving.monitor_server import MonitorServer
 from repro.serving.replica import InOrderReleaser, ReplicaEngine
 from repro.serving.router import (POLICIES, Router, event_occupancy,
                                   pick_bucket)
+from repro.serving.streaming import LOOPS, StreamingReplicaEngine
 
-__all__ = ["AggregateStats", "InOrderReleaser", "MonitorServer",
+__all__ = ["AggregateStats", "InOrderReleaser", "LOOPS", "MonitorServer",
            "MonitorSnapshot", "POLICIES", "ReplicaEngine", "Router",
-           "ServingStats", "ShardedTriggerService", "TriggerMonitor",
+           "ServingStats", "ShardedTriggerService",
+           "StreamingReplicaEngine", "TriggerMonitor",
            "TriggerServingEngine", "detector_grid", "event_display",
            "event_occupancy", "pick_bucket", "write_display"]

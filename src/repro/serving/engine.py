@@ -38,9 +38,10 @@ from repro.serving.replica import (EventTiming, InOrderReleaser,
                                    ReplicaEngine, ServingStats)
 from repro.serving.router import (POLICIES, Router, event_occupancy,
                                   pick_bucket)
+from repro.serving.streaming import LOOPS, StreamingReplicaEngine
 
 __all__ = ["AggregateStats", "ServingStats", "ShardedTriggerService",
-           "TriggerServingEngine", "POLICIES"]
+           "TriggerServingEngine", "POLICIES", "LOOPS"]
 
 
 class AggregateStats:
@@ -165,6 +166,15 @@ class ShardedTriggerService:
     ``event_displays()``, and pass ``truth=`` to ``submit`` to get
     online truth-matched efficiency / fake-rate in the snapshot.
 
+    ``loop``: the replica hot-loop flavor. ``"deadline"`` (default —
+    the original behavior, bit-for-bit) launches a micro-batch when it
+    fills or ``window_s`` elapses; ``"streaming"`` runs the persistent
+    streaming-dataflow pipeline (``streaming.py``): rolling batching
+    into preallocated input rings, async launch dispatch, and a
+    harvest stage draining a host output ring — no deadline tick, so
+    an arriving event joins the next in-flight launch instead of
+    waiting for a batch boundary. Hedging is deadline-only.
+
     ``buckets``: occupancy-bucketed dispatch (paper-adjacent: size the
     datapath to per-event occupancy instead of the detector maximum).
     Pass a ``core.pipeline.BucketedPipeline`` (its per-bucket
@@ -184,9 +194,16 @@ class ShardedTriggerService:
                  hedge_after_s: float | None = None,
                  policy: str = "round_robin", devices="auto",
                  inflight: int = 2, warmup_fn=None, monitor=False,
-                 buckets=None, mask_feed: str = "mask"):
+                 buckets=None, mask_feed: str = "mask",
+                 loop: str = "deadline"):
         if n_replicas < 1:
             raise ValueError("n_replicas must be >= 1")
+        if loop not in LOOPS:
+            raise ValueError(f"unknown replica loop {loop!r}; expected "
+                             f"one of {LOOPS}")
+        self.loop = loop
+        engine_cls = StreamingReplicaEngine if loop == "streaming" \
+            else ReplicaEngine
         self.mask_feed = mask_feed
         bucket_warmups = None
         if buckets is not None:
@@ -260,15 +277,15 @@ class ShardedTriggerService:
             wf = warmup_fns[i] if key not in warmed else None
             warmed.add(key)
             self.replicas.append(
-                ReplicaEngine(fn, self._releaser, microbatch=microbatch,
-                              window_s=window_s, queue_depth=queue_depth,
-                              hedge_after_s=hedge_after_s, device=dev,
-                              replica_id=i, inflight=inflight,
-                              warmup_fn=wf,
-                              monitor=self.monitors[i]
-                              if self.monitors else None,
-                              truth_map=self._truth
-                              if self.monitors else None))
+                engine_cls(fn, self._releaser, microbatch=microbatch,
+                           window_s=window_s, queue_depth=queue_depth,
+                           hedge_after_s=hedge_after_s, device=dev,
+                           replica_id=i, inflight=inflight,
+                           warmup_fn=wf,
+                           monitor=self.monitors[i]
+                           if self.monitors else None,
+                           truth_map=self._truth
+                           if self.monitors else None))
         if self.buckets:
             self._bucket_groups = {
                 b: self.replicas[gi * n_replicas:(gi + 1) * n_replicas]
@@ -426,11 +443,12 @@ class TriggerServingEngine(ShardedTriggerService):
 
     def __init__(self, infer_fn, *, microbatch: int, window_s: float = 1e-3,
                  queue_depth: int = 1024,
-                 hedge_after_s: float | None = None, monitor=False):
+                 hedge_after_s: float | None = None, monitor=False,
+                 loop: str = "deadline"):
         super().__init__(infer_fn, n_replicas=1, microbatch=microbatch,
                          window_s=window_s, queue_depth=queue_depth,
                          hedge_after_s=hedge_after_s, devices=None,
-                         monitor=monitor)
+                         monitor=monitor, loop=loop)
 
     @property
     def stats(self) -> ServingStats:

@@ -12,6 +12,12 @@ shared ``InOrderReleaser`` keyed on the *global* submission sequence
 number, so strict submission order is preserved across replicas no
 matter how their batches interleave.
 
+This module implements the **deadline** loop (the original
+request/response-shaped micro-batcher); ``streaming.py`` subclasses
+``ReplicaEngine`` with the persistent streaming-dataflow loop
+(preallocated input/output rings, rolling batching, no deadline tick).
+The service selects between them with ``loop=``.
+
 Latency budget accounting (paper §III): each event's end-to-end latency
 is split into
 
@@ -199,6 +205,8 @@ class ReplicaEngine:
     """One serving lane: bounded queue -> deadline micro-batcher ->
     double-buffered dispatch -> shared in-order releaser."""
 
+    loop = "deadline"
+
     def __init__(self, infer_fn, releaser: InOrderReleaser, *,
                  microbatch: int, window_s: float = 1e-3,
                  queue_depth: int = 1024, hedge_after_s: float | None = None,
@@ -216,6 +224,7 @@ class ReplicaEngine:
         self.window = window_s
         self.hedge_after = hedge_after_s
         self.device = device
+        self.inflight = inflight
         self.replica_id = replica_id
         self.stats = ServingStats(replica_id=replica_id)
         # warm-up (e.g. replaying tuning-cache winners so the jit cache
@@ -248,7 +257,14 @@ class ReplicaEngine:
         self._batcher = threading.Thread(
             target=self._run, daemon=True,
             name=f"replica{replica_id}-batcher")
+        # loop-specific state (e.g. the streaming engine's rings and
+        # harvest thread) must exist before the batcher thread runs.
+        self._setup_loop()
         self._batcher.start()
+
+    def _setup_loop(self):
+        """Hook for subclasses to build loop state (rings, extra
+        stage threads) before the batcher thread starts."""
 
     # ------------------------------------------------------------ intake ----
     def enqueue(self, seq: int, t_submit: float, event: dict, fut):

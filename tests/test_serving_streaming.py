@@ -1,0 +1,247 @@
+"""Streaming replica loop: rolling-batch admission, global in-order
+release under interleaved bucket completions, drain/close exactly-once
+release, and deadline-loop parity via the ``loop=`` escape hatch."""
+import threading
+import time
+
+import numpy as np
+import jax
+import pytest
+
+from repro.core import caloclusternet as ccn
+from repro.core.passes.parallelize import Requirements
+from repro.core.pipeline import deploy
+from repro.data.belle2 import Belle2Config, generate
+from repro.serving import (LOOPS, ReplicaEngine, ShardedTriggerService,
+                           StreamingReplicaEngine)
+
+
+def _ids(feeds):
+    """Recover the integer event ids packed into a launch (padding
+    rows carry id 0)."""
+    return [int(v) for v in np.asarray(feeds["x"]).ravel() if v > 0]
+
+
+# ------------------------------------------------- rolling admission ----
+def test_rolling_admission_joins_next_launch():
+    """An event submitted while a launch is in flight must ride the
+    *next* launch — no deadline tick, no batch-boundary wait.  The
+    huge window proves the streaming loop never consults it."""
+    gate = threading.Event()
+    launched = threading.Event()
+    launches = []
+
+    def infer(feeds):
+        launches.append(_ids(feeds))
+        if len(launches) == 1:
+            launched.set()
+            assert gate.wait(timeout=30)
+        return {"y": feeds["x"]}
+
+    svc = ShardedTriggerService(infer, n_replicas=1, microbatch=4,
+                                window_s=60.0, devices=None,
+                                inflight=1, loop="streaming")
+    try:
+        f1 = svc.submit({"x": np.array([1.0], np.float32)})
+        assert launched.wait(timeout=30)   # event 1 is in flight
+        f2 = svc.submit({"x": np.array([2.0], np.float32)})
+        f3 = svc.submit({"x": np.array([3.0], np.float32)})
+        # the pipeline is gated (inflight=1), so 2 and 3 can only be
+        # queued; releasing the gate must sweep both into one launch.
+        gate.set()
+        for f in (f1, f2, f3):
+            f.result(timeout=30)
+        svc.drain()
+        assert launches == [[1], [2, 3]]
+        assert svc.stats.batches == 2
+    finally:
+        svc.close()
+
+
+# --------------------------------- in-order release across buckets ----
+def test_global_inorder_release_under_interleaved_buckets():
+    """A slow small-occupancy bucket and a fast large-occupancy bucket
+    complete out of order; the shared releaser must still resolve
+    futures in global submission order."""
+    def make_echo(delay_s):
+        def infer(feeds):
+            time.sleep(delay_s)
+            return {"y": feeds["mask"]}
+        return infer
+
+    svc = ShardedTriggerService(
+        buckets={4: make_echo(20e-3), 8: make_echo(1e-3)},
+        n_replicas=1, microbatch=2, window_s=60.0, devices=None,
+        loop="streaming")
+    try:
+        n = 16
+        order, lock = [], threading.Lock()
+
+        def track(i):
+            def cb(_fut):
+                with lock:
+                    order.append(i)
+            return cb
+
+        futs = []
+        for i in range(n):
+            occ = 2 if i % 2 == 0 else 6   # alternate buckets
+            mask = np.zeros(8, np.float32)
+            mask[:occ] = 1.0
+            fut = svc.submit({"mask": mask})
+            fut.add_done_callback(track(i))
+            futs.append(fut)
+        res = [f.result(timeout=60) for f in futs]
+        svc.drain()
+        assert order == list(range(n))
+        # bucket routing cut each event's feeds to its bucket shape
+        for i, r in enumerate(res):
+            assert r["y"].shape == ((4,) if i % 2 == 0 else (8,))
+    finally:
+        svc.close()
+
+
+# ------------------------------------------- drain / close semantics ----
+def test_drain_with_backlog_releases_every_event_once():
+    calls = []
+
+    def infer(feeds):
+        time.sleep(2e-3)
+        calls.append(1)
+        return {"y": feeds["x"]}
+
+    svc = ShardedTriggerService(infer, n_replicas=1, microbatch=4,
+                                window_s=60.0, devices=None,
+                                loop="streaming")
+    try:
+        n = 40
+        released, lock = [], threading.Lock()
+
+        def track(i):
+            def cb(_fut):
+                with lock:
+                    released.append(i)
+            return cb
+
+        futs = []
+        for i in range(n):
+            fut = svc.submit({"x": np.full(2, i + 1, np.float32)})
+            fut.add_done_callback(track(i))
+            futs.append(fut)
+        svc.drain()
+        assert all(f.done() for f in futs)
+        assert sorted(released) == list(range(n))    # exactly once
+        assert released == list(range(n))            # and in order
+        assert svc.stats.completed == n
+    finally:
+        svc.close()
+
+
+def test_close_with_backlog_resolves_every_future_exactly_once():
+    """close() with events still queued/staged/in flight: every
+    accepted event resolves exactly once — completed or failed, never
+    silently dropped."""
+    def infer(feeds):
+        time.sleep(5e-3)
+        return {"y": feeds["x"]}
+
+    svc = ShardedTriggerService(infer, n_replicas=1, microbatch=2,
+                                window_s=60.0, devices=None,
+                                inflight=1, loop="streaming")
+    n = 20
+    resolved, lock = [], threading.Lock()
+
+    def track(i):
+        def cb(_fut):
+            with lock:
+                resolved.append(i)
+        return cb
+
+    futs = []
+    for i in range(n):
+        fut = svc.submit({"x": np.full(2, i + 1, np.float32)})
+        fut.add_done_callback(track(i))
+        futs.append(fut)
+    svc.close()   # immediately, with a deep backlog
+    assert all(f.done() for f in futs)
+    assert sorted(resolved) == list(range(n))
+    ok = sum(1 for f in futs if f.exception() is None)
+    err = n - ok
+    assert ok + err == n
+    assert err >= 1          # the backlog cannot all have completed
+    assert svc.stats.completed == ok
+    assert sum(r.stats.failed for r in svc.replicas) == err
+
+
+# ------------------------------------------------------- escape hatch ----
+def test_loop_selection_and_default():
+    svc = ShardedTriggerService(lambda f: f, n_replicas=1, microbatch=2,
+                                devices=None)
+    try:
+        assert svc.loop == "deadline"
+        assert type(svc.replicas[0]) is ReplicaEngine
+    finally:
+        svc.close()
+    svc = ShardedTriggerService(lambda f: f, n_replicas=1, microbatch=2,
+                                devices=None, loop="streaming")
+    try:
+        assert svc.loop == "streaming"
+        assert isinstance(svc.replicas[0], StreamingReplicaEngine)
+    finally:
+        svc.close()
+
+
+def test_invalid_loop_and_streaming_rejects_hedge():
+    assert set(LOOPS) == {"deadline", "streaming"}
+    with pytest.raises(ValueError, match="unknown replica loop"):
+        ShardedTriggerService(lambda f: f, microbatch=2, devices=None,
+                              loop="bogus")
+    with pytest.raises(ValueError, match="hedge_after_s"):
+        ShardedTriggerService(lambda f: f, microbatch=2, devices=None,
+                              hedge_after_s=1e-3, loop="streaming")
+
+
+# --------------------------------------------- deployed-pipeline e2e ----
+def test_streaming_loop_matches_direct_pipeline():
+    """Real compiled trigger pipeline through the streaming loop (two
+    replicas, monitoring on): results must match the direct pipeline
+    call event for event, and the monitor tap must see every event."""
+    cfg = ccn.CCNConfig(n_hits=16, n_crystals=144)
+    gen = Belle2Config(n_crystals=144, grid=(12, 12), n_hits=16,
+                       noise_rate=4.0)
+    params = ccn.init(jax.random.PRNGKey(0), cfg)
+    graph = ccn.to_graph(params, cfg)
+    calib = generate(gen, 16, seed=1)
+    feeds = {"hits": calib["feats"], "mask": calib["mask"]}
+    req = Requirements(design_point=3, platform="cpu",
+                       precision_policy="fp", n_hits=cfg.n_hits,
+                       target_throughput=2e4, max_latency_s=2e-3)
+    pipe = deploy(graph, req, calibration_feeds=feeds)
+
+    def infer(batch):
+        return pipe({"hits": batch["hits"], "mask": batch["mask"]})
+
+    mb = max(pipe.microbatch, 4)
+    infer({"hits": calib["feats"][:mb], "mask": calib["mask"][:mb]})
+
+    svc = ShardedTriggerService(infer, n_replicas=2, microbatch=mb,
+                                window_s=60.0, devices=None,
+                                loop="streaming", monitor=True)
+    try:
+        events = generate(gen, 24, seed=2)
+        futs = [svc.submit({"hits": events["feats"][i],
+                            "mask": events["mask"][i]})
+                for i in range(24)]
+        results = [f.result(timeout=120) for f in futs]
+        svc.drain()
+        direct = pipe({"hits": events["feats"], "mask": events["mask"]})
+        for i in range(24):
+            np.testing.assert_allclose(
+                np.asarray(results[i]["coords"]),
+                np.asarray(direct["coords"][i]), rtol=1e-5, atol=1e-5)
+            assert (bool(results[i]["cps"]["trigger"])
+                    == bool(np.asarray(direct["cps"]["trigger"])[i]))
+        snap = svc.monitor_snapshot()
+        assert snap["events"] == 24
+    finally:
+        svc.close()

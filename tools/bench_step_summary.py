@@ -1,0 +1,136 @@
+"""Render the benchmark results as a GitHub step-summary table.
+
+Reads ``BENCH_summary.json`` (the consolidated per-section scoreboard
+``benchmarks/run.py`` writes) plus the standalone ``BENCH_*.json``
+trajectory files the CI bench-smoke job produces, and prints a
+markdown score table to stdout.  The CI workflow pipes it into
+``$GITHUB_STEP_SUMMARY`` with ``if: always()``, so a red gate still
+shows *which* number missed:
+
+    python tools/bench_step_summary.py >> "$GITHUB_STEP_SUMMARY"
+
+Everything here is defensive — a missing or reshaped file yields a
+skipped row, never a crashed summary step.
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def _load(name: str) -> dict | list | None:
+    path = REPO / name
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, ValueError):
+        return None
+
+
+def _fmt(x) -> str:
+    if x is None:
+        return "—"
+    if isinstance(x, bool):
+        return "✅" if x else "❌"
+    if isinstance(x, float):
+        return f"{x:,.2f}"
+    return str(x)
+
+
+def section_table(summary: dict) -> list[str]:
+    lines = [f"### Benchmark sections "
+             f"(`{summary.get('git_sha', '?')}`)", "",
+             "| section | ok | score | seconds |",
+             "|---|---|---|---|"]
+    sections = summary.get("sections")
+    if not isinstance(sections, dict):
+        return []
+    for name, entry in sections.items():
+        if not isinstance(entry, dict):
+            continue
+        lines.append(f"| {name} | {_fmt(entry.get('ok'))} "
+                     f"| {_fmt(entry.get('score'))} "
+                     f"| {_fmt(entry.get('seconds'))} |")
+    return lines
+
+
+# headline extractors per standalone trajectory file: each returns a
+# list of (metric, value) rows, or raises — callers swallow the error
+# and skip the file.
+def _latency_rows(d: dict) -> list[tuple[str, object]]:
+    s = d["loops"]["streaming"]
+    dl = d["loops"]["deadline"]
+    return [
+        ("streaming p50 / p99 (µs)",
+         f"{s['p50_us']:,.0f} / {s['p99_us']:,.0f}"),
+        ("deadline p50 / p99 (µs)",
+         f"{dl['p50_us']:,.0f} / {dl['p99_us']:,.0f}"),
+        ("p99 ratio (gate ≤ %.2f)" % d["check"]["max_p99_ratio"],
+         f"{d['p99_ratio_streaming_vs_deadline']:.2f}"),
+        ("SLO gate", bool(d["check"]["pass"])),
+    ]
+
+
+def _batching_rows(d: list) -> list[tuple[str, object]]:
+    best = max(p["speedup"] for p in d if p.get("microbatch", 0) >= 8)
+    return [("best batch-packing speedup (mb ≥ 8)", f"{best:.2f}×")]
+
+
+def _fusion_rows(d: list) -> list[tuple[str, object]]:
+    worst = min(min(p["block_speedup"], p["int8_speedup"])
+                for p in d if p.get("microbatch", 0) >= 8)
+    return [("worst fused-block speedup (mb ≥ 8)", f"{worst:.2f}×")]
+
+
+def _monitoring_rows(d: dict) -> list[tuple[str, object]]:
+    return [("monitoring hot-path overhead",
+             f"{100 * d['overhead_frac']:.2f}%")]
+
+
+_HEADLINES = {
+    "BENCH_latency.json": _latency_rows,
+    "BENCH_batching.json": _batching_rows,
+    "BENCH_fusion.json": _fusion_rows,
+    "BENCH_monitoring.json": _monitoring_rows,
+}
+
+
+def headline_table() -> list[str]:
+    rows: list[tuple[str, str, object]] = []
+    for name, extract in _HEADLINES.items():
+        data = _load(name)
+        if data is None:
+            continue
+        try:
+            rows.extend((name, k, v) for k, v in extract(data))
+        except (KeyError, TypeError, ValueError):
+            rows.append((name, "(unreadable)", None))
+    if not rows:
+        return []
+    lines = ["### Headline numbers", "",
+             "| file | metric | value |", "|---|---|---|"]
+    lines.extend(f"| `{f}` | {k} | {_fmt(v)} |" for f, k, v in rows)
+    return lines
+
+
+def main() -> int:
+    out: list[str] = []
+    summary = _load("BENCH_summary.json")
+    if isinstance(summary, dict):
+        out.extend(section_table(summary))
+    headlines = headline_table()
+    if headlines:
+        if out:
+            out.append("")
+        out.extend(headlines)
+    if not out:
+        out = ["_No benchmark result files found._"]
+    print("\n".join(out))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
