@@ -22,7 +22,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from repro.core.graph_ir import Graph, Operator
+from repro.core.graph_ir import Graph, Operator, register_exporter
 from repro.kernels import ref as kref
 from repro.nn import dense_init, dense_apply
 
@@ -221,3 +221,6 @@ def to_graph(params, cfg: CCNConfig) -> Graph:
     g.validate()
     g.meta["config"] = cfg
     return g
+
+
+register_exporter("caloclusternet", to_graph)

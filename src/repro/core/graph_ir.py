@@ -5,37 +5,33 @@ Mirrors the paper's internal representation: nodes are operators
 (fusion, partitioning, mapping, spatial parallelization, kernel-level
 optimization) transforms this graph until it is lowered to an executable.
 
-Operator taxonomy (paper §III-A):
-  regular, statically-scheduled access  -> eligible for the MXU ("AIE")
-      linear, dense (fused linear+act), relu, concat, slice, retile,
-      quant, dequant
-  irregular, data-dependent access      -> pinned to XLA/VPU ("FPGA")
-      gravnet_aggregate (kNN gather), cps (condensation point selection),
-      input, output (DDR interface analogues)
+Operator taxonomy (paper §III-A): every op type is *declared once* in
+``repro.core.op_registry`` (regular vs irregular access, per-target
+templates, shape inference, cost model, kernel binders), and the passes
+dispatch on those declarations. ``REGULAR_OPS``/``IRREGULAR_OPS`` below
+are live views of the registry, kept for callers of the original API.
 
 The TPU-native GravNet kernel (argmin + one-hot matmul) makes
 ``gravnet_aggregate`` statically schedulable; the partitioner can be told
 so via ``tpu_native_gravnet=True`` — that reclassification is a
 beyond-paper optimization measured separately in the benchmarks.
+
+Models enter the flow through the **exporter protocol**: a model module
+ships a ``to_graph(params, cfg) -> Graph`` function and registers it
+with :func:`register_exporter`, after which the whole deploy → serving
+stack can host it by name (see ``launch/serve.py --model``).
 """
 from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field
-from typing import Any
+from typing import Any, Protocol, runtime_checkable
 
-# Operator types with regular (statically scheduled) access patterns.
-REGULAR_OPS = frozenset({
-    "linear", "dense", "relu", "concat", "slice", "retile", "quant",
-    "dequant", "attention",
-})
-# Irregular / data-dependent ops (the paper pins these to the FPGA).
-# ``gravnet_block`` (the fused dense→aggregate→dense megakernel) carries
-# the aggregation's data-dependent selection, so it classifies exactly
-# like ``gravnet_aggregate``: irregular faithfully, regular under the
-# TPU-native reformulation.
-IRREGULAR_OPS = frozenset({"gravnet_aggregate", "gravnet_block", "cps",
-                           "input", "output"})
+from repro.core import op_registry as _reg
+
+# live views of the registry, for callers of the original constants
+REGULAR_OPS = _reg.regular_ops()
+IRREGULAR_OPS = _reg.irregular_ops()
 
 
 @dataclass
@@ -158,9 +154,46 @@ class Graph:
 
 
 def is_regular(op: Operator, *, tpu_native_gravnet: bool = False) -> bool:
-    if op.op_type in REGULAR_OPS:
-        return True
-    if tpu_native_gravnet and op.op_type in ("gravnet_aggregate",
-                                             "gravnet_block"):
-        return True
-    return False
+    return _reg.is_regular(op, tpu_native_gravnet=tpu_native_gravnet)
+
+
+# ------------------------------------------------------------------------
+# exporter protocol: how a model joins the deploy flow
+@runtime_checkable
+class GraphExporter(Protocol):
+    """A model-side export entry point: build the dataflow IR for one
+    trained parameter set. Implementations must return a validated
+    graph whose op types are all registered in ``core.op_registry``
+    and set ``g.meta['config']`` to the model config."""
+
+    def __call__(self, params: Any, cfg: Any) -> Graph: ...
+
+
+_EXPORTERS: dict[str, GraphExporter] = {}
+
+
+def register_exporter(name: str, fn: GraphExporter) -> GraphExporter:
+    """Register a model's ``to_graph`` under a stable name."""
+    if name in _EXPORTERS:
+        raise ValueError(f"exporter {name!r} already registered")
+    _EXPORTERS[name] = fn
+    return fn
+
+
+def exporters() -> tuple[str, ...]:
+    return tuple(sorted(_EXPORTERS))
+
+
+def export_graph(name: str, params: Any, cfg: Any) -> Graph:
+    """Export a registered model to graph IR, rejecting graphs with op
+    types no pass recognizes (same preflight ``deploy()`` runs)."""
+    if name not in _EXPORTERS:
+        raise KeyError(f"no exporter {name!r}; registered: "
+                       f"{', '.join(exporters()) or '(none)'}")
+    g = _EXPORTERS[name](params, cfg)
+    bad = _reg.unknown_ops(g)
+    if bad:
+        listing = ", ".join(f"{n} ({t!r})" for n, t in bad)
+        raise _reg.UnknownOperatorError(
+            f"exporter {name!r} emitted unregistered op types: {listing}")
+    return g

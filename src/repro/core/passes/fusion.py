@@ -1,6 +1,13 @@
 """Operator-fusion pass (paper §III-A "Operator Fusion").
 
-Three rewrites, all semantics-preserving:
+Every rewrite is a registered :class:`~repro.core.op_registry.FusionRule`
+keyed on graph-IR op patterns — ``fuse()`` replays the registry in
+registration order and knows nothing about any particular model. The
+GravNet-block collapse below is simply one registered (opt-in) pattern;
+new op families add rules via ``op_registry.register_fusion_rule``
+without touching this pass.
+
+Three registered rewrites, all semantics-preserving:
 
 1. **Linear+ReLU → Dense**: a ``linear`` whose *only* consumer is a
    ``relu`` is replaced by one ``dense`` operator carrying the activation
@@ -41,6 +48,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from repro.core.graph_ir import Graph, Operator
+from repro.core.op_registry import fusion_rules, register_fusion_rule
 
 
 def _fuse_linear_relu(g: Graph) -> Graph:
@@ -271,22 +279,39 @@ def _merge_parallel_dense(g: Graph) -> Graph:
     return out
 
 
-def fuse(g: Graph, *, gravnet_block: bool = False) -> Graph:
-    """Run the fusion rewrites to a fixed point.
+# registration order IS application order: linear+relu first (so the
+# block rewrite sees denses carrying their activation), the opt-in
+# GravNet-block collapse second (before the merge, so the S/F
+# projections are still separate operators), the parallel-dense merge
+# last, iterated to a fixed point.
+register_fusion_rule("linear_relu", _fuse_linear_relu)
+register_fusion_rule("gravnet_block", _fuse_gravnet_block, opt_in=True)
+register_fusion_rule("parallel_dense", _merge_parallel_dense,
+                     fixpoint=True)
 
-    ``gravnet_block=True`` additionally collapses every fusable
+
+def fuse(g: Graph, *, gravnet_block: bool = False,
+         enable: tuple[str, ...] = ()) -> Graph:
+    """Replay the registered fusion rules in registration order.
+
+    Opt-in rules run only when named in ``enable`` (or, for the
+    GravNet-block collapse, via the legacy ``gravnet_block=True``
+    switch, which ``deploy`` sets by default): every fusable
     dense(S)/dense(F) → gravnet_aggregate [→ concat] → dense(out) chain
-    into one ``gravnet_block`` operator. It runs after the linear+relu
-    fusion (so the output dense carries its activation) and before the
-    parallel-dense merge (so the S/F projections are still separate,
-    unmerged operators). ``False`` reproduces the legacy graphs
-    bit-for-bit.
+    then collapses into one ``gravnet_block`` operator.
+    ``gravnet_block=False`` reproduces the legacy graphs bit-for-bit.
     """
-    g = _fuse_linear_relu(g)
+    enabled = set(enable)
     if gravnet_block:
-        g = _fuse_gravnet_block(g)
-    prev = -1
-    while len(g) != prev:
-        prev = len(g)
-        g = _merge_parallel_dense(g)
+        enabled.add("gravnet_block")
+    for rule in fusion_rules():
+        if rule.opt_in and rule.name not in enabled:
+            continue
+        if rule.fixpoint:
+            prev = -1
+            while len(g) != prev:
+                prev = len(g)
+                g = rule.fn(g)
+        else:
+            g = rule.fn(g)
     return g

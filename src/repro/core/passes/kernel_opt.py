@@ -8,10 +8,12 @@ resource allocation.
 
 TPU analogues applied here (design ③):
 
-1. **Kernel flattening** — MXU dense ops below a size threshold switch
-   from the grid-looped Pallas variant to the single-cell 'flattened'
-   variant (whole operand in VMEM, no K loop). Larger ops get tuned
-   (bm, bn, bk) block shapes instead.
+1. **Kernel binding** — every op's launch knobs are bound by the binder
+   its registry spec declares (``op_registry.bind_kernels``): MXU dense
+   ops below a size threshold switch from the grid-looped Pallas variant
+   to the single-cell 'flattened' variant (whole operand in VMEM, no K
+   loop), larger ops get tuned (bm, bn, bk) block shapes; gravnet /
+   gravnet_block / edge_aggregate / attention bind cache-only knobs.
 2. **Retile cancellation / layout propagation** — adjacent retiles that
    undo each other (lane128 → compact → lane128) are bypassed so a chain
    of MXU kernels hands tensors over in padded layout without copies.
@@ -19,13 +21,15 @@ TPU analogues applied here (design ③):
    another dense emits int8 directly (requantized in the epilogue with
    the consumer's input scale) instead of dequant→requant through f32;
    scales are folded (the paper's bit-exact 8-bit interior handoff).
+   Which consumers may sit on an 8-bit handoff is declared per op spec
+   (``OpSpec.int8_passthrough``).
 4. **Whole-pipeline jit** — the executor compiles the entire graph as one
    XLA program instead of one dispatch per segment (removes the
    heterogeneous-boundary overhead the paper measured in design ①).
 
 Variant/block selection consults the persistent tuning cache
 (``repro.tuning``) when one is supplied: a cached winner for the exact
-(kernel, shape, dtype, backend) problem overrides the heuristic below,
+(kernel, shape, dtype, backend) problem overrides the heuristic,
 because LL-GNN-style studies show the latency-optimal config is
 shape-dependent and must be searched. With no cache (or on any miss)
 the heuristic is used unchanged — an empty cache reproduces today's
@@ -34,6 +38,7 @@ bindings bit-for-bit (tested).
 from __future__ import annotations
 
 from repro.core.graph_ir import Graph
+from repro.core.op_registry import BindContext, bind_kernels, op_spec
 
 FLATTEN_ROWS = 512        # rows (hits × microbatch) below which we flatten
 FLATTEN_DIM = 1024        # max feature dim for the flattened variant
@@ -82,81 +87,13 @@ def kernel_optimize(g: Graph, *, n_rows: int = 128, batch: int = 1,
     executable, unchanged legacy bindings and cache keys)."""
     g = g.clone()
 
-    # 1. variant selection / block tuning (cached winner > heuristic)
+    # 1. per-op kernel binding, dispatched through the registry
+    # (cached winner > heuristic; cache-only binders leave a miss
+    # untouched → identical bindings)
+    ctx = BindContext(n_rows=n_rows, batch=batch, cache=tuning_cache,
+                      backend=backend)
     for op in g:
-        if op.template != "fused_dense":
-            continue
-        rows, d_in, d_out = fused_dense_shape(op, n_rows, batch)
-        tuned = None
-        if tuning_cache is not None:
-            from repro.tuning.cache import fused_dense_key
-            tuned = tuning_cache.lookup(fused_dense_key(
-                rows, d_in, d_out, fused_dense_dtype(op), backend))
-        if tuned is not None:
-            for knob in _FUSED_DENSE_KNOBS:
-                if knob in tuned:
-                    op.attrs_opt[knob] = tuned[knob]
-            # provenance: the executor only overrides its built-in int8
-            # block defaults for configs that were actually searched
-            op.attrs_opt["tuned"] = True
-        elif rows <= FLATTEN_ROWS and max(d_in, d_out) <= FLATTEN_DIM:
-            op.attrs_opt["variant"] = "flattened"
-        else:
-            op.attrs_opt["variant"] = "looped"
-            op.attrs_opt["bm"] = _pick_block(rows, 512)
-            op.attrs_opt["bn"] = _pick_block(d_out, 512)
-            op.attrs_opt["bk"] = _pick_block(d_in, 2048)
-
-    # 1b. gravnet row-tile: cache-only (the kernel's own default is the
-    # heuristic; a miss leaves attrs_opt untouched → identical bindings)
-    if tuning_cache is not None:
-        from repro.tuning.cache import (flash_attention_key,
-                                        gravnet_block_int8_key,
-                                        gravnet_block_key, gravnet_key)
-        for op in g:
-            if op.op_type != "gravnet_aggregate":
-                continue
-            tuned = tuning_cache.lookup(gravnet_key(
-                n_rows, op.attrs["d_s"], op.attrs["d_f"], op.attrs["k"],
-                "float32", backend, batch=batch))
-            if tuned is not None and "bm" in tuned:
-                op.attrs_opt["bm"] = tuned["bm"]
-
-        # 1c. fused GravNet block: cache-only (bm, bn, bk) bindings —
-        # the 5-dim batched key (batch, n, d_hidden, d_f, k); a miss
-        # keeps the wrapper's bitwise-safe defaults (whole-operand
-        # epilogue, bm = min(n, 128)). An int8 block keys with the
-        # dtype-tagged gravnet_block_int8 family — the quantized
-        # megakernel's winners never bind onto the f32 kernel or vice
-        # versa.
-        for op in g:
-            if op.op_type != "gravnet_block":
-                continue
-            if op.precision == "int8":
-                key = gravnet_block_int8_key(
-                    n_rows, op.attrs["d_hidden"], op.attrs["d_f"],
-                    op.attrs["k"], backend, batch=batch)
-            else:
-                key = gravnet_block_key(
-                    n_rows, op.attrs["d_hidden"], op.attrs["d_f"],
-                    op.attrs["k"], "float32", backend, batch=batch)
-            tuned = tuning_cache.lookup(key)
-            if tuned is not None:
-                for knob in ("bm", "bn", "bk"):
-                    if knob in tuned:
-                        op.attrs_opt[knob] = tuned[knob]
-
-        # 1d. attention → flash_attention (bq, bk): cache-only
-        for op in g:
-            if op.op_type != "attention":
-                continue
-            tuned = tuning_cache.lookup(flash_attention_key(
-                batch, n_rows, n_rows, op.out_dim or 128, "float32",
-                backend))
-            if tuned is not None:
-                for knob in ("bq", "bk"):
-                    if knob in tuned:
-                        op.attrs_opt[knob] = tuned[knob]
+        bind_kernels(op, ctx)
 
     # 2. retile cancellation: retile(B->A) after retile(A->B) bypasses both
     changed = True
@@ -177,13 +114,16 @@ def kernel_optimize(g: Graph, *, n_rows: int = 128, batch: int = 1,
                 changed = True
                 break
 
-    # 3. int8 chain fusion
+    # 3. int8 chain fusion: a dense may emit int8 straight into
+    # consumers whose specs declare an 8-bit passthrough
     for op in g:
         if op.precision != "int8" or op.op_type != "dense":
             continue
         succ = g.successors(op.name)
-        if succ and all(s.precision == "int8" and s.op_type in
-                        ("dense", "relu", "slice", "concat") for s in succ):
+        if succ and all(s.precision == "int8"
+                        and getattr(op_spec(s.op_type),
+                                    "int8_passthrough", False)
+                        for s in succ):
             op.attrs_opt["emit_int8"] = True
 
     # 4. whole-pipeline jit

@@ -1,84 +1,47 @@
 """Mapping pass (paper §III-A "Mapping").
 
-Pattern-matches every operator onto an architecture template and
-*legalizes layouts*: when the output layout of a producer does not match
-the expected input layout of a consumer, a ``retile`` operator is inserted
-on that edge (the paper's Retile kernel).
+Maps every operator onto the architecture template its registry spec
+declares for the partitioner's target (``OpSpec.templates`` in
+``core/op_registry.py``) and *legalizes layouts*: when the output layout
+of a producer does not match the expected input layout of a consumer, a
+``retile`` operator is inserted on that edge (the paper's Retile
+kernel). The pass knows no op type by name — a new op family joins by
+declaring its per-target templates in its spec.
 
-Templates:
+Templates (declared per op spec):
     mxu  dense            -> 'fused_dense'   (Pallas kernel; variant picked
                                               by the kernel-opt pass)
     xla  dense            -> 'xla_dense'
     mxu  gravnet_aggregate-> 'gravnet_kernel' (only with tpu_native_gravnet)
     xla  gravnet_aggregate-> 'xla_gravnet'
+    mxu  edge_aggregate   -> 'edge_aggregate_kernel' (tpu_native only)
+    xla  edge_aggregate   -> 'xla_edge_aggregate'
     *    cps              -> 'xla_cps'
-    *    relu/concat/...  -> 'xla_eltwise' / 'xla_concat' / 'xla_slice'
+    *    relu/eltwise/... -> 'xla_eltwise' / 'xla_concat' / 'xla_slice'
 
-Layouts: MXU templates exchange tensors in ``lane128`` layout (feature dim
-zero-padded to a multiple of 128 — the VREG lane width, the analogue of
-the AIE window format); XLA templates exchange ``compact`` tensors. A
-retile is a real pad or slice op: design point ① pays for every crossing,
-the kernel-opt pass later cancels adjacent pad/slice pairs (layout
-propagation).
+Layouts come from ``op_registry.template_layout``: MXU templates
+exchange tensors in ``lane128`` layout (feature dim zero-padded to a
+multiple of 128 — the VREG lane width, the analogue of the AIE window
+format); XLA templates exchange ``compact`` tensors. A retile is a real
+pad or slice op: design point ① pays for every crossing, the kernel-opt
+pass later cancels adjacent pad/slice pairs (layout propagation).
 """
 from __future__ import annotations
 
 from repro.core.graph_ir import Graph, Operator
-
-LANE = 128
-
-_TEMPLATES = {
-    ("dense", "mxu"): "fused_dense",
-    ("dense", "xla"): "xla_dense",
-    ("linear", "mxu"): "fused_dense",   # design ① (pre-fusion) linears
-    ("linear", "xla"): "xla_dense",
-    ("gravnet_aggregate", "mxu"): "gravnet_kernel",
-    ("gravnet_aggregate", "xla"): "xla_gravnet",
-    ("gravnet_block", "mxu"): "gravnet_block_kernel",
-    ("gravnet_block", "xla"): "xla_gravnet_block",
-    ("attention", "mxu"): "flash_attention",
-    ("attention", "xla"): "xla_attention",
-    ("cps", "mxu"): "xla_cps",
-    ("cps", "xla"): "xla_cps",
-    ("relu", "mxu"): "xla_eltwise",
-    ("relu", "xla"): "xla_eltwise",
-    ("concat", "mxu"): "xla_concat",
-    ("concat", "xla"): "xla_concat",
-    ("slice", "mxu"): "xla_slice",
-    ("slice", "xla"): "xla_slice",
-    ("quant", "mxu"): "xla_quant",
-    ("quant", "xla"): "xla_quant",
-    ("dequant", "mxu"): "xla_quant",
-    ("dequant", "xla"): "xla_quant",
-    ("input", "xla"): "io",
-    ("output", "xla"): "io",
-    ("retile", "mxu"): "xla_retile",
-    ("retile", "xla"): "xla_retile",
-}
-
-# layout each template produces / expects on its data edges; the fused
-# gravnet_block hands tensors over in the MXU lane128 layout on BOTH
-# targets (its executor slices/pads its own operands), so a
-# dense → block → dense chain needs no retiles at all — the unfused
-# chain's concat→dense retile is exactly the layout crossing the
-# megakernel eliminates
-_PRODUCES = {"fused_dense": "lane128", "gravnet_kernel": "lane128",
-             "gravnet_block_kernel": "lane128",
-             "xla_gravnet_block": "lane128"}
-_EXPECTS = {"fused_dense": "lane128", "gravnet_kernel": "lane128",
-            "gravnet_block_kernel": "lane128",
-            "xla_gravnet_block": "lane128"}
+from repro.core.op_registry import (LANE, require_spec,  # noqa: F401
+                                    template_layout)
 
 
 def map_templates(g: Graph, *, legalize_layouts: bool = True) -> Graph:
     g = g.clone()
     for op in g:
-        key = (op.op_type, op.target or "xla")
-        if key not in _TEMPLATES:
-            raise ValueError(f"no template for {key}")
-        op.template = _TEMPLATES[key]
-        op.attrs.setdefault("layout",
-                            _PRODUCES.get(op.template, "compact"))
+        target = op.target or "xla"
+        template = require_spec(op).templates.get(target)
+        if template is None:
+            raise ValueError(f"no template for {(op.op_type, target)}")
+        op.template = template
+        op.attrs.setdefault("layout", template_layout(op.template))
     if not legalize_layouts:
         return g
 
@@ -86,7 +49,7 @@ def map_templates(g: Graph, *, legalize_layouts: bool = True) -> Graph:
     out = Graph()
     renamed: dict[str, dict[str, str]] = {}  # producer -> {layout: name}
     for op in g:
-        want = _EXPECTS.get(op.template, "compact")
+        want = template_layout(op.template)
         new_inputs = []
         for inp in op.inputs:
             prod = out[renamed[inp]["_self"]]

@@ -16,7 +16,10 @@ Cost model per op (per event): peak-normalized max(compute, memory) with a
 size-derived MXU efficiency factor (small matrices underfill the 128×128
 systolic array — the TPU analogue of the paper's observation that loop
 overhead dominates tiny AIE kernels). Weights are VMEM-resident and
-amortized across the micro-batch; activations stream per event.
+amortized across the micro-batch; activations stream per event. The
+per-op-type formulas are declared on the op registry specs
+(``OpSpec.cost`` / ``OpSpec.mxu_eff`` in ``core/op_registry.py``); this
+pass only interprets them.
 """
 from __future__ import annotations
 
@@ -24,6 +27,7 @@ import dataclasses
 import math
 
 from repro.core.graph_ir import Graph
+from repro.core.op_registry import default_cost, require_spec
 from repro.launch import mesh as hw
 
 VPU_PEAK = 4e12  # v5e vector unit, FLOP/s (non-MXU ops)
@@ -44,71 +48,16 @@ class Requirements:
 
 
 def op_cost(op, n_hits: int, *, precision_bytes: float = 1.0):
-    """(flops, act_bytes, weight_bytes) per event."""
-    t = op.op_type
-    d_out = op.out_dim or 1
-    if t in ("dense", "linear"):
-        d_in = op.params["w"].shape[0] if op.params else d_out
-        flops = 2.0 * n_hits * d_in * d_out
-        act = n_hits * (d_in + d_out) * precision_bytes
-        wb = d_in * d_out * precision_bytes
-        return flops, act, wb
-    if t == "gravnet_aggregate":
-        ds = op.attrs.get("d_s", 4)
-        df = op.attrs.get("d_f", d_out // 2)
-        k = op.attrs.get("k", 8)
-        flops = 2.0 * n_hits * n_hits * (ds + k * df) + 10.0 * n_hits * k
-        act = n_hits * (ds + df + d_out) * precision_bytes
-        return flops, act, 0.0
-    if t == "gravnet_block":
-        # fused dense(S)∥dense(F) → aggregate → dense(out): compute is
-        # the sum of the parts, but only x and the block output touch
-        # HBM — the S/F/aggregate intermediates stay in VMEM (the point
-        # of the megakernel)
-        dh = op.attrs.get("d_hidden", 64)
-        ds = op.attrs.get("d_s", 4)
-        df = op.attrs.get("d_f", d_out // 2)
-        k = op.attrs.get("k", 8)
-        dcat = dh + 2 * df if op.attrs.get("concat_x", True) else 2 * df
-        flops = (2.0 * n_hits * dh * (ds + df)              # prologue
-                 + 2.0 * n_hits * n_hits * (ds + k * df)    # aggregate
-                 + 10.0 * n_hits * k
-                 + 2.0 * n_hits * dcat * d_out)             # epilogue
-        act = n_hits * (dh + d_out) * precision_bytes
-        wb = (dh * (ds + df) + dcat * d_out) * precision_bytes
-        return flops, act, wb
-    if t == "attention":
-        d = d_out
-        flops = 4.0 * n_hits * n_hits * d + 10.0 * n_hits * n_hits
-        act = n_hits * 4.0 * d * precision_bytes
-        return flops, act, 0.0
-    if t == "cps":
-        kmax = op.attrs.get("k_max", 8)
-        flops = 20.0 * n_hits * kmax + 10.0 * n_hits * math.log2(max(n_hits, 2))
-        act = n_hits * 8.0 * precision_bytes
-        return flops, act, 0.0
-    if t in ("relu", "concat", "slice", "retile", "quant", "dequant"):
-        flops = 1.0 * n_hits * d_out
-        act = 2.0 * n_hits * d_out * precision_bytes
-        return flops, act, 0.0
-    return 0.0, n_hits * d_out * precision_bytes, 0.0
+    """(flops, act_bytes, weight_bytes) per event, from the op's
+    registered cost hook."""
+    cost = require_spec(op).cost or default_cost
+    return cost(op, n_hits, precision_bytes)
 
 
 def _mxu_efficiency(op, n_rows: int, n_hits: int = 128) -> float:
     """Fraction of MXU peak a matmul of this size can use."""
-    if op.op_type in ("gravnet_aggregate", "gravnet_block"):
-        # one-hot selection matmuls: (rows, n_hits) @ (n_hits, d_f)
-        df = op.attrs.get("d_f", 32)
-        return (min(n_hits, 128) / 128.0) * (min(df, 128) / 128.0)
-    if op.op_type == "attention":
-        d = op.out_dim or 128
-        return (min(n_hits, 128) / 128.0) * (min(d, 128) / 128.0)
-    if op.op_type not in ("dense", "linear"):
-        return 1.0
-    d_in = op.params["w"].shape[0] if op.params else 128
-    d_out = op.out_dim or 128
-    return (min(d_in, 128) / 128.0) * (min(d_out, 128) / 128.0) * \
-        min(1.0, n_rows / 8.0)
+    eff = require_spec(op).mxu_eff
+    return eff(op, n_rows, n_hits) if eff is not None else 1.0
 
 
 def segment_time(ops, n_hits: int, p: int, platform: str = "tpu") -> float:
@@ -121,9 +70,7 @@ def segment_time(ops, n_hits: int, p: int, platform: str = "tpu") -> float:
     t = 0.0
     for op in ops:
         flops, act, wb = op_cost(op, n_hits)
-        is_mm = (op.op_type in ("dense", "linear", "gravnet_aggregate",
-                                "gravnet_block", "attention")
-                 and op.target == "mxu")
+        is_mm = require_spec(op).mxu_matmul and op.target == "mxu"
         eff = _mxu_efficiency(op, n_hits * p, n_hits) if is_mm else 1.0
         peak = peak_mxu if is_mm else peak_vpu
         t_compute = p * flops / (eff * peak)

@@ -13,10 +13,16 @@ After assignment, consecutive runs of same-target ops in topological order
 form pipeline *segments* (the paper derives 7: 4 FPGA + 3 AIE for
 CaloClusterNet).
 
-``tpu_native_gravnet=True`` reclassifies gravnet_aggregate as regular —
-the TPU-specific beyond-paper move enabled by the argmin/one-hot-matmul
-kernel (see kernels/gravnet.py); it reduces the segment count and removes
-two boundary crossings per GravNet block.
+Regularity is *declared*, not hard-coded: each op type's registry spec
+(``core/op_registry.py``) carries ``regular`` / ``tpu_native_regular``
+flags and this pass just reads them, so a new op family partitions
+correctly the moment it registers. ``tpu_native_gravnet=True``
+reclassifies the ops whose specs opt in (gravnet_aggregate,
+gravnet_block, edge_aggregate) as regular — the TPU-specific
+beyond-paper move enabled by the argmin/one-hot-matmul kernels (see
+kernels/gravnet.py, kernels/edge_aggregate.py); for CaloClusterNet it
+reduces the segment count and removes two boundary crossings per
+GravNet block.
 """
 from __future__ import annotations
 

@@ -1,124 +1,38 @@
 """Graph-verification pass: shape/feature-dim inference over the IR.
 
 Run before deploy(): walks the dataflow graph in topo order, infers each
-operator's output feature dim from its inputs + params, and raises on
-inconsistencies (dangling inputs, dense weight-shape mismatches, concat
-dim errors, slice out of range, CPS head wiring). The paper's flow is
+operator's output feature dim via the op registry's per-type ``infer``
+hooks (``core/op_registry.py``), and raises on inconsistencies (dangling
+inputs, dense weight-shape mismatches, concat dim errors, slice out of
+range, CPS head wiring, unregistered op types). The paper's flow is
 "semi-automated" — this is the automated legality check that makes the
-rest safe to automate.
+rest safe to automate. Opening the flow to a new op family means
+registering an :class:`~repro.core.op_registry.OpSpec` with an ``infer``
+hook, not editing this pass.
 """
 from __future__ import annotations
 
 from repro.core.graph_ir import Graph
-
-
-class GraphVerificationError(ValueError):
-    pass
+from repro.core.op_registry import (GraphVerificationError,  # noqa: F401
+                                    UnknownOperatorError, require_spec)
 
 
 def verify(g: Graph) -> dict:
     """Returns {op_name: inferred_out_dim}; raises on malformed graphs."""
     dims: dict[str, int] = {}
     for op in g:
-        ins = op.inputs
-        for i in ins:
+        for i in op.inputs:
             if i not in dims:
                 raise GraphVerificationError(
                     f"{op.name}: input {i!r} not yet defined (topo order)")
-        t = op.op_type
-        if t == "input":
-            if op.out_dim is None:
-                raise GraphVerificationError(f"{op.name}: input needs "
-                                             "out_dim")
-            dims[op.name] = op.out_dim
-        elif t in ("linear", "dense"):
-            if not op.params or "w" not in op.params:
-                raise GraphVerificationError(f"{op.name}: missing weight")
-            d_in, d_out = op.params["w"].shape
-            got = dims[ins[0]]
-            if got != d_in:
-                raise GraphVerificationError(
-                    f"{op.name}: weight expects d_in={d_in}, producer "
-                    f"{ins[0]!r} provides {got}")
-            if "b" in op.params and op.params["b"].shape != (d_out,):
-                raise GraphVerificationError(f"{op.name}: bias shape "
-                                             f"{op.params['b'].shape}")
-            dims[op.name] = d_out
-        elif t in ("relu", "quant", "dequant"):
-            dims[op.name] = dims[ins[0]]
-        elif t == "retile":
-            dims[op.name] = op.out_dim or dims[ins[0]]
-        elif t == "concat":
-            dims[op.name] = sum(dims[i] for i in ins)
-        elif t == "slice":
-            st, sz = op.attrs["start"], op.attrs["size"]
-            if st + sz > dims[ins[0]]:
-                raise GraphVerificationError(
-                    f"{op.name}: slice [{st}:{st + sz}] exceeds producer "
-                    f"dim {dims[ins[0]]}")
-            dims[op.name] = sz
-        elif t == "gravnet_aggregate":
-            if len(ins) != 3:
-                raise GraphVerificationError(
-                    f"{op.name}: needs (s, f, mask) inputs")
-            ds, df = op.attrs.get("d_s"), op.attrs.get("d_f")
-            if dims[ins[0]] != ds or dims[ins[1]] != df:
-                raise GraphVerificationError(
-                    f"{op.name}: S/FLR dims ({dims[ins[0]]},{dims[ins[1]]})"
-                    f" != attrs ({ds},{df})")
-            dims[op.name] = 2 * df
-        elif t == "gravnet_block":
-            if len(ins) != 2:
-                raise GraphVerificationError(
-                    f"{op.name}: needs (x, mask) inputs")
-            need = ("ws", "bs", "wf", "bf", "wo", "bo")
-            if not op.params or any(p not in op.params for p in need):
-                raise GraphVerificationError(
-                    f"{op.name}: gravnet_block needs params {need}")
-            dh = op.attrs.get("d_hidden")
-            ds, df = op.attrs.get("d_s"), op.attrs.get("d_f")
-            if dims[ins[0]] != dh:
-                raise GraphVerificationError(
-                    f"{op.name}: x provides {dims[ins[0]]}, expects "
-                    f"d_hidden={dh}")
-            if op.params["ws"].shape != (dh, ds):
-                raise GraphVerificationError(
-                    f"{op.name}: ws shape {op.params['ws'].shape} != "
-                    f"({dh},{ds})")
-            if op.params["wf"].shape != (dh, df):
-                raise GraphVerificationError(
-                    f"{op.name}: wf shape {op.params['wf'].shape} != "
-                    f"({dh},{df})")
-            dcat = (dh + 2 * df if op.attrs.get("concat_x", True)
-                    else 2 * df)
-            if op.params["wo"].shape[0] != dcat:
-                raise GraphVerificationError(
-                    f"{op.name}: wo expects {op.params['wo'].shape[0]} "
-                    f"inputs, block provides {dcat}")
-            dims[op.name] = int(op.params["wo"].shape[1])
-        elif t == "attention":
-            if len(ins) != 3:
-                raise GraphVerificationError(
-                    f"{op.name}: needs (q, k, v) inputs")
-            if len({dims[i] for i in ins}) != 1:
-                raise GraphVerificationError(
-                    f"{op.name}: q/k/v dims differ: "
-                    f"{[dims[i] for i in ins]}")
-            dims[op.name] = dims[ins[0]]
-        elif t == "cps":
-            heads = op.attrs.get("head_names", [])
-            if len(ins) != len(heads) + 1:
-                raise GraphVerificationError(
-                    f"{op.name}: expects {len(heads)} heads + mask, got "
-                    f"{len(ins)} inputs")
-            dims[op.name] = op.out_dim or 1
-        elif t == "output":
-            dims[op.name] = sum(dims[i] for i in ins
-                                if g[i].op_type != "cps")
-        else:
-            raise GraphVerificationError(f"{op.name}: unknown op {t!r}")
+        spec = require_spec(op)  # unknown op types raise here
+        if spec.infer is None:
+            raise UnknownOperatorError(
+                f"{op.name}: op {op.op_type!r} is registered without a "
+                "shape-inference hook")
+        dims[op.name] = spec.infer(op, dims, g)
         if op.out_dim is not None and dims[op.name] != op.out_dim \
-                and t not in ("output",):
+                and op.op_type not in ("output",):
             raise GraphVerificationError(
                 f"{op.name}: declared out_dim {op.out_dim} != inferred "
                 f"{dims[op.name]}")

@@ -108,6 +108,14 @@ class _Executor:
             out = self._gravnet_block(op, vals, prec)
         elif t == "attention":
             out = self._attention(op, vals)
+        elif t == "gather_edge":
+            out = self._gather_edge(op, vals)
+        elif t == "edge_aggregate":
+            out = self._edge_aggregate(op, vals)
+        elif t == "eltwise":
+            out = self._eltwise(op, vals)
+        elif t == "batchnorm":
+            out = self._batchnorm(op, vals)
         elif t == "cps":
             out = self._cps(op, vals)
         elif t == "output":
@@ -116,7 +124,11 @@ class _Executor:
             if len(vals) > len(names):  # cps result dict
                 out["cps"] = vals[len(names)]
         else:
-            raise ValueError(f"no executor for op {t}")
+            from repro.core.op_registry import op_spec
+            hint = ("registered but not lowered by this executor"
+                    if op_spec(t) is not None else "unknown op type")
+            raise ValueError(f"no executor for op {op.name!r} "
+                             f"({t!r}: {hint})")
         if record is not None and t not in ("cps", "output", "input"):
             record[op.name] = float(jnp.max(jnp.abs(_as_fp(out))))
         return out
@@ -226,6 +238,75 @@ class _Executor:
             activation=op.attrs.get("activation", "none"),
             concat_x=op.attrs.get("concat_x", True),
             backend=self.backend, **kw)
+
+    def _gather_edge(self, op, vals):
+        """Endpoint gather by the edge list: x:(B,N,d), ei:(B,2,E) ->
+        (B,E,d). Data-dependent, so it stays on the xla target."""
+        x, ei = vals
+        d = op.out_dim
+        xf = _as_fp(x)[..., :d]         # lane128-padded producer
+        idx = ei[:, 0 if op.attrs["endpoint"] == "src" else 1, :]
+        return jnp.take_along_axis(xf, idx[:, :, None].astype(jnp.int32),
+                                   axis=1)
+
+    def _edge_aggregate(self, op, vals):
+        """Masked segment-sum/mean of per-edge messages into nodes —
+        one batched one-hot-incidence kernel launch per micro-batch."""
+        msgs, ei = vals[0], vals[1]
+        mask = _as_fp(vals[2]) if len(vals) > 2 else None
+        d = op.out_dim
+        mf = _as_fp(msgs)[..., :d]
+        n_nodes = int(op.attrs.get("n_nodes") or self.req.n_hits)
+        return kops.edge_aggregate_batched(
+            mf, ei.astype(jnp.int32), n_nodes, mask,
+            reduce=op.attrs.get("reduce", "sum"),
+            bm=op.attrs_opt.get("bm"), be=op.attrs_opt.get("be"),
+            backend=self.backend)
+
+    def _eltwise(self, op, vals):
+        """N-ary elementwise algebra; ``fn`` picks the operation."""
+        fn = op.attrs["fn"]
+        d = op.out_dim
+        if fn == "mask":                # x:(B,R,d) * mask:(B,R)
+            x, m = _as_fp(vals[0])[..., :d], _as_fp(vals[1])
+            return x * m[..., None]
+        xs = [_as_fp(v)[..., :d] for v in vals]
+        if fn == "add":
+            y = xs[0]
+            for v in xs[1:]:
+                y = y + v
+            return y
+        if fn == "mul":
+            y = xs[0]
+            for v in xs[1:]:
+                y = y * v
+            return y
+        if fn == "div":
+            return xs[0] / xs[1]
+        if fn == "sigmoid":
+            return jax.nn.sigmoid(xs[0])
+        if fn == "relu":
+            return jnp.maximum(xs[0], 0.0)
+        if fn == "add_const":
+            return xs[0] + op.attrs["const"]
+        if fn == "l2norm":
+            return xs[0] / jnp.maximum(
+                jnp.linalg.norm(xs[0], axis=-1, keepdims=True), 1e-6)
+        raise ValueError(f"{op.name}: unknown eltwise fn {fn!r}")
+
+    def _batchnorm(self, op, vals):
+        """Masked per-event batch normalization (the benchmarking-gnns
+        training-mode statistics, vectorized over the micro-batch):
+        x:(B,R,d), mask:(B,R)."""
+        x, mask = vals
+        d = op.out_dim
+        xf = _as_fp(x)[..., :d]
+        m = _as_fp(mask)[..., None]
+        n = jnp.maximum(m.sum(axis=1, keepdims=True), 1.0)
+        mu = (xf * m).sum(axis=1, keepdims=True) / n
+        var = (((xf - mu) ** 2) * m).sum(axis=1, keepdims=True) / n
+        eps = op.attrs.get("eps", 1e-5)
+        return (xf - mu) * jax.lax.rsqrt(var + eps) * m
 
     def _attention(self, op, vals):
         d = op.out_dim

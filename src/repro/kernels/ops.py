@@ -20,6 +20,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref as _ref
+from repro.kernels.edge_aggregate import (edge_aggregate_batched_pallas,
+                                          edge_aggregate_pallas)
 from repro.kernels.fused_dense import (fused_dense_batched_pallas,
                                        fused_dense_int8_pallas,
                                        fused_dense_pallas)
@@ -332,6 +334,71 @@ def gravnet_block_int8_batched(x, mask, ws_q, bs, wf_q, bf, wo_q, bo,
         bm=bm, bn=bn, bk=bk, out_dtype=out_dtype, out_scale=out_scale,
         interpret=interpret)
     return y[:, :n]
+
+
+# ---------------------------------------------------------- edge aggregate ----
+@functools.partial(jax.jit, static_argnames=("n_nodes", "reduce", "bm",
+                                             "be", "backend"))
+def edge_aggregate(messages, edge_index, n_nodes, edge_mask=None, *,
+                   reduce="sum", bm=None, be=None, backend="auto"):
+    """Masked segment-sum/mean of per-edge messages into nodes.
+
+    messages:(E,d), edge_index:(2,E) int32 (src,dst), edge_mask:(E,)
+    -> (n_nodes, d). The Pallas path lowers the scatter as a one-hot
+    incidence matmul (see kernels/edge_aggregate.py).
+    """
+    backend = _resolve(backend)
+    if backend == "xla":
+        return _ref.edge_aggregate_ref(messages, edge_index, n_nodes,
+                                       edge_mask, reduce=reduce)
+    interpret = backend == "pallas_interpret"
+    e = messages.shape[0]
+    mask = (jnp.ones((e,), jnp.float32) if edge_mask is None
+            else edge_mask.astype(jnp.float32))
+    bm = bm or min(n_nodes, 128)
+    be = be or e
+    mp = _pad_to(messages, be, 0)
+    dp = _pad_to(edge_index[1].astype(jnp.int32), be, 0)
+    kp = _pad_to(mask, be, 0)
+    n_pad = n_nodes + ((-n_nodes) % bm)
+    y = edge_aggregate_pallas(mp, dp, kp, n_nodes=n_pad, reduce=reduce,
+                              bm=bm, be=be, interpret=interpret)
+    return y[:n_nodes]
+
+
+@functools.partial(jax.jit, static_argnames=("n_nodes", "reduce", "bm",
+                                             "be", "backend"))
+def edge_aggregate_batched(messages, edge_index, n_nodes, edge_mask=None, *,
+                           reduce="sum", bm=None, be=None, backend="auto"):
+    """Micro-batched edge aggregation — one launch per micro-batch.
+
+    messages:(B,E,d), edge_index:(B,2,E), edge_mask:(B,E)
+    -> (B, n_nodes, d). The batched kernel runs grid (B, N/bm) with one
+    event's edge list per cell, so aggregation is block-diagonal across
+    the micro-batch by construction.
+    """
+    backend = _resolve(backend)
+    if backend == "xla":
+        if edge_mask is None:
+            return jax.vmap(lambda m, ei: _ref.edge_aggregate_ref(
+                m, ei, n_nodes, reduce=reduce))(messages, edge_index)
+        return jax.vmap(lambda m, ei, km: _ref.edge_aggregate_ref(
+            m, ei, n_nodes, km, reduce=reduce))(messages, edge_index,
+                                                edge_mask)
+    interpret = backend == "pallas_interpret"
+    b, e, _ = messages.shape
+    mask = (jnp.ones((b, e), jnp.float32) if edge_mask is None
+            else edge_mask.astype(jnp.float32))
+    bm = bm or min(n_nodes, 128)
+    be = be or e
+    mp = _pad_to(messages, be, 1)
+    dp = _pad_to(edge_index[:, 1, :].astype(jnp.int32), be, 1)
+    kp = _pad_to(mask, be, 1)
+    n_pad = n_nodes + ((-n_nodes) % bm)
+    y = edge_aggregate_batched_pallas(mp, dp, kp, n_nodes=n_pad,
+                                      reduce=reduce, bm=bm, be=be,
+                                      interpret=interpret)
+    return y[:, :n_nodes]
 
 
 # --------------------------------------------------------- flash attention ----

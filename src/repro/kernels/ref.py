@@ -179,6 +179,30 @@ def gravnet_block_int8_ref(x, mask, ws_q, bs, wf_q, bf, wo_q, bo, ws_scale,
     return y.reshape(*lead, y.shape[-1])
 
 
+# ---------------------------------------------------------- edge aggregate ----
+def edge_aggregate_ref(messages, edge_index, n_nodes, edge_mask=None, *,
+                       reduce="sum", out_dtype=None):
+    """Masked segment-sum/mean of per-edge messages into destination
+    nodes — the jnp mirror of ``models.gnn.common.scatter_sum`` /
+    ``scatter_mean`` (padded edges carry mask 0 and point at node 0).
+
+    messages:(E,d), edge_index:(2,E) int (src,dst), mask:(E,) -> (n,d).
+    """
+    out_dtype = out_dtype or messages.dtype
+    msgs = messages.astype(jnp.float32)
+    if edge_mask is not None:
+        msgs = msgs * edge_mask.astype(jnp.float32)[:, None]
+    dst = edge_index[1]
+    out = jax.ops.segment_sum(msgs, dst, num_segments=n_nodes)
+    if reduce == "mean":
+        ones = jnp.ones((messages.shape[0],), jnp.float32)
+        if edge_mask is not None:
+            ones = ones * edge_mask.astype(jnp.float32)
+        cnt = jax.ops.segment_sum(ones, dst, num_segments=n_nodes)
+        out = out / jnp.maximum(cnt, 1.0)[:, None]
+    return out.astype(out_dtype)
+
+
 # --------------------------------------------------------- flash attention ----
 def flash_attention_ref(q, k, v, *, causal=True):
     """Plain softmax attention oracle. q:(BH,S,D) k,v:(BH,T,D)."""

@@ -1,14 +1,23 @@
 """Serving driver: ``python -m repro.launch.serve [...]``.
 
-Runs the paper's demonstrator end to end on CPU: deploy CaloClusterNet
-through the design flow at the chosen design point, wrap the compiled
-pipeline in the real-time sharded trigger service (micro-batching
-window, strict in-order completion, hedged dispatch), stream synthetic
-Belle II events through it, and report throughput/latency percentiles
-plus the real-time monitoring pipeline (paper §III-B): an online
-``MonitorSnapshot`` with truth-matched efficiency/fake-rate, an
-optional live HTTP endpoint (``--monitor-port``), and a JSON event
-display written through the shared ``event_display`` helper.
+Runs a registered model end to end on CPU: deploy it through the
+model-agnostic design flow at the chosen design point (the model joins
+via its ``core.graph_ir`` exporter — serve.py has no model-specific
+imports at module level), wrap the compiled pipeline in the real-time
+sharded trigger service (micro-batching window, strict in-order
+completion, hedged dispatch), stream synthetic events through it, and
+report throughput/latency percentiles.
+
+``--model`` picks the route(s) from the serve-side model registry
+(``MODELS``; default ``ccn``). The single-model ``ccn`` selection runs
+the paper's full demonstrator — brief condensation training, the
+monitoring pipeline (paper §III-B: online ``MonitorSnapshot`` with
+truth-matched efficiency/fake-rate, optional ``--monitor-port`` HTTP
+endpoint, JSON event display), and the ``--buckets`` occupancy path.
+Any other selection serves the named models side by side through
+per-route replica groups (``ShardedTriggerService(routes=...)``) — the
+CCN trigger next to the edge-based GNNs — and can write a
+``--bench-out`` JSON with per-route serving stats.
 
 ``--buckets`` switches to the occupancy-bucketed path: one batch-packed
 executable per n_hits tier (``deploy_bucketed``), each event dispatched
@@ -26,16 +35,113 @@ import argparse
 import json
 import time
 import urllib.request
+from typing import Callable, NamedTuple
 
 import jax
 import numpy as np
 
-from repro.core import caloclusternet as ccn
+from repro.core.graph_ir import export_graph
 from repro.core.passes.parallelize import Requirements
 from repro.core.pipeline import deploy, deploy_bucketed
-from repro.data.belle2 import Belle2Config, current_detector, generate
 from repro.serving import (MonitorServer, ShardedTriggerService,
                            event_display, write_display)
+
+
+# ------------------------------------------------------------ model zoo ----
+class Servable(NamedTuple):
+    """One deployed route: the compiled pipeline plus a synthetic
+    per-event feed source matching its input features."""
+    name: str
+    pipe: Callable
+    events: Callable      # (n, seed) -> list of per-event feed dicts
+
+
+_EDGE_N, _EDGE_E = 64, 256     # E = 4N, the registry's edge budget
+
+
+def _edge_events(d_in, d_edge_in=None):
+    def events(n, seed):
+        rng = np.random.default_rng(seed)
+        out = []
+        for _ in range(n):
+            ev = {
+                "nodes": rng.normal(
+                    size=(_EDGE_N, d_in)).astype(np.float32),
+                "edge_index": rng.integers(
+                    0, _EDGE_N, size=(2, _EDGE_E)).astype(np.int32),
+                "node_mask": (rng.uniform(size=(_EDGE_N,)) < 0.8)
+                .astype(np.float32),
+                "edge_mask": (rng.uniform(size=(_EDGE_E,)) < 0.7)
+                .astype(np.float32),
+            }
+            if d_edge_in is not None:
+                ev["edges"] = rng.normal(
+                    size=(_EDGE_E, d_edge_in)).astype(np.float32)
+            out.append(ev)
+        return out
+    return events
+
+
+def _ccn_servable(args) -> Servable:
+    from repro.core import caloclusternet as ccn
+    from repro.data.belle2 import (Belle2Config, current_detector,
+                                   generate)
+    if args.detector == "current":
+        cfg, gen_cfg = ccn.current_detector_config(), current_detector()
+    else:
+        cfg, gen_cfg = ccn.CCNConfig(), Belle2Config()
+    params = ccn.init(jax.random.PRNGKey(0), cfg)
+    graph = export_graph("caloclusternet", params, cfg)
+    calib = generate(gen_cfg, 64, seed=123)
+    req = Requirements(design_point=args.design_point, platform="cpu",
+                       precision_policy=args.precision,
+                       n_hits=cfg.n_hits,
+                       target_throughput=args.target_throughput,
+                       max_latency_s=2e-3)
+    pipe = deploy(graph, req, calibration_feeds={
+        "hits": calib["feats"], "mask": calib["mask"]})
+
+    def events(n, seed):
+        ev = generate(gen_cfg, n, seed=seed)
+        return [{"hits": ev["feats"][i], "mask": ev["mask"][i]}
+                for i in range(n)]
+
+    return Servable("ccn", pipe, events)
+
+
+def _gatedgcn_servable(args) -> Servable:
+    from repro.models.gnn import gatedgcn
+    cfg = gatedgcn.GatedGCNConfig(n_layers=4, d_hidden=32, d_in=8,
+                                  d_edge_in=4, n_classes=2)
+    params = gatedgcn.init(jax.random.PRNGKey(1), cfg)
+    graph = export_graph("gatedgcn", params, cfg)
+    req = Requirements(design_point=args.design_point, platform="cpu",
+                       precision_policy="fp", n_hits=_EDGE_N,
+                       target_throughput=args.target_throughput,
+                       max_latency_s=2e-3)
+    return Servable("gatedgcn", deploy(graph, req),
+                    _edge_events(cfg.d_in, cfg.d_edge_in))
+
+
+def _graphsage_servable(args) -> Servable:
+    from repro.models.gnn import graphsage
+    cfg = graphsage.GraphSAGEConfig(n_layers=2, d_hidden=32, d_in=16,
+                                    n_classes=5)
+    params = graphsage.init(jax.random.PRNGKey(2), cfg)
+    graph = export_graph("graphsage", params, cfg)
+    req = Requirements(design_point=args.design_point, platform="cpu",
+                       precision_policy="fp", n_hits=_EDGE_N,
+                       target_throughput=args.target_throughput,
+                       max_latency_s=2e-3)
+    return Servable("graphsage", deploy(graph, req),
+                    _edge_events(cfg.d_in))
+
+
+MODELS: dict[str, Callable] = {
+    "ccn": _ccn_servable,
+    "gatedgcn": _gatedgcn_servable,
+    "graphsage": _graphsage_servable,
+}
 
 
 def _tune_and_rebind(cache, args, problems, redeploy):
@@ -54,8 +160,83 @@ def _tune_and_rebind(cache, args, problems, redeploy):
     return redeploy() if n_new else None   # rebind fresh winners
 
 
+def _serve_multimodel(args):
+    """Heterogeneous-model serving: one route (replica group) per
+    requested model behind a single global in-order release stage."""
+    servables = [MODELS[m](args) for m in args.model]
+    mb = max(8, *(getattr(s.pipe, "microbatch", 1) for s in servables))
+    for s in servables:   # warm up compile before traffic
+        warm = s.events(mb, 99)
+        s.pipe({k: np.stack([e[k] for e in warm]) for k in warm[0]})
+    print(f"[serve] deployed design ③{args.design_point} routes="
+          f"{[s.name for s in servables]} microbatch={mb}")
+    eng = ShardedTriggerService(
+        routes={s.name: s.pipe for s in servables},
+        n_replicas=args.replicas, microbatch=mb, window_s=2e-3,
+        policy=args.policy, loop=args.loop)
+    per = {s.name: s.events(args.events // len(servables) +
+                            (i < args.events % len(servables)),
+                            seed=7 + i)
+           for i, s in enumerate(servables)}
+    t0 = time.perf_counter()
+    futs = []
+    cursors = {name: iter(evs) for name, evs in per.items()}
+    live = list(cursors)
+    while live:               # interleave the model streams
+        for name in list(live):
+            ev = next(cursors[name], None)
+            if ev is None:
+                live.remove(name)
+            else:
+                futs.append(eng.submit(ev, route=name))
+    results = [f.result(timeout=120) for f in futs]
+    dt = time.perf_counter() - t0
+    eng.drain()
+    released = len(results)
+    s = eng.stats.summary()
+    print(f"[serve] {released} events in {dt:.2f}s -> "
+          f"{released / dt:,.0f} ev/s (CPU, {args.replicas} replica(s) "
+          f"per route, {args.policy}, {args.loop} loop)")
+    print(f"[serve] latency p50={s['p50_us']:.0f}us "
+          f"p99={s['p99_us']:.0f}us batches={s['batches']}")
+    route_rows = eng.route_summary()
+    for row in route_rows:
+        print(f"[serve]   route {row['route']}: "
+              f"{row['submitted']} submitted, {row['completed']} "
+              f"completed, {row['batches']} batches")
+    eng.close()
+    if args.bench_out:
+        bench = {
+            "events": args.events, "elapsed_s": dt, "loop": args.loop,
+            "throughput_ev_s": released / dt,
+            "p50_us": s["p50_us"], "p99_us": s["p99_us"],
+            "routes": {row["route"]: {k: v for k, v in row.items()
+                                      if k != "route"}
+                       for row in route_rows},
+            "released_nonzero": released > 0,
+        }
+        with open(args.bench_out, "w") as f:
+            json.dump(bench, f, indent=2)
+        print(f"[serve] multi-model stats -> {args.bench_out}")
+    if released < args.events or any(
+            row["completed"] != row["submitted"] for row in route_rows):
+        raise SystemExit("multi-model serving released fewer events "
+                         "than were submitted")
+
+
 def main():
     ap = argparse.ArgumentParser()
+    ap.add_argument("--model", nargs="+", default=["ccn"],
+                    choices=sorted(MODELS), metavar="NAME",
+                    help="registered model route(s) to serve (default "
+                         "ccn). A single 'ccn' runs the full "
+                         "demonstrator (training, buckets, "
+                         "monitoring); any other selection serves the "
+                         "named models side by side through per-route "
+                         "replica groups")
+    ap.add_argument("--bench-out", default=None, metavar="PATH",
+                    help="write per-route serving stats JSON "
+                         "(multi-model path only)")
     ap.add_argument("--detector", choices=["current", "upgrade"],
                     default="upgrade")
     ap.add_argument("--design-point", type=int, default=3,
@@ -123,6 +304,12 @@ def main():
                          "megakernel; fp deployments still fuse")
     args = ap.parse_args()
 
+    if args.model != ["ccn"]:
+        return _serve_multimodel(args)
+
+    from repro.core import caloclusternet as ccn
+    from repro.data.belle2 import (Belle2Config, current_detector,
+                                   generate)
     if args.detector == "current":
         cfg = ccn.current_detector_config()
         gen_cfg = current_detector()
@@ -160,7 +347,7 @@ def main():
             params, opt, l = _step(params, opt, b)
         print(f"[serve] warm-trained {args.train_steps} steps, "
               f"loss {float(l):.3f}")
-    graph = ccn.to_graph(params, cfg)
+    graph = export_graph("caloclusternet", params, cfg)
     calib = generate(gen_cfg, 64, seed=123)
     feeds = {"hits": calib["feats"], "mask": calib["mask"]}
     req = Requirements(design_point=args.design_point, platform="cpu",

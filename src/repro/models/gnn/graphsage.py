@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.core.graph_ir import Graph, Operator, register_exporter
 from repro.dist.sharding import DP, TP
 from repro.models.gnn import common as C
 from repro.nn import dense_init, dense_apply
@@ -110,6 +111,61 @@ def apply_sampled(params, batch, cfg: GraphSAGEConfig):
     return dense_apply(params["head"], h[:sizes[0]])
 
 
+def to_graph(params, cfg: GraphSAGEConfig):
+    """Export the full-graph mode as a dataflow graph for the
+    deployment flow (repro.core.pipeline) — numerically identical in
+    fp mode (tested).
+
+    The mean aggregator lowers to a ``gather_edge`` (source endpoint)
+    feeding an ``edge_aggregate`` with ``reduce='mean'`` — the same
+    Pallas one-hot-incidence kernel the gated models use, with the
+    masked edge-count epilogue. Sampled-minibatch mode has a dynamic
+    frontier layout and does not export."""
+    g = Graph()
+
+    g.add(Operator(name="nodes", op_type="input", out_dim=cfg.d_in,
+                   attrs={"feature": "nodes"}))
+    g.add(Operator(name="edge_index", op_type="input", out_dim=2,
+                   attrs={"feature": "edge_index"}))
+    g.add(Operator(name="node_mask", op_type="input", out_dim=1,
+                   attrs={"feature": "node_mask"}))
+    g.add(Operator(name="edge_mask", op_type="input", out_dim=1,
+                   attrs={"feature": "edge_mask"}))
+    h, d = "nodes", cfg.d_in
+    for i, lp in enumerate(params["layers"]):
+        g.add(Operator(name=f"l{i}_hj", op_type="gather_edge",
+                       inputs=[h, "edge_index"],
+                       attrs={"endpoint": "src"}, out_dim=d))
+        g.add(Operator(name=f"l{i}_neigh", op_type="edge_aggregate",
+                       inputs=[f"l{i}_hj", "edge_index", "edge_mask"],
+                       attrs={"reduce": "mean"}, out_dim=d))
+        g.add(Operator(name=f"l{i}_cat", op_type="concat",
+                       inputs=[h, f"l{i}_neigh"], out_dim=2 * d))
+        g.add(Operator(name=f"l{i}_z", op_type="linear",
+                       inputs=[f"l{i}_cat"], params=dict(lp["w"]),
+                       out_dim=cfg.d_hidden))
+        g.add(Operator(name=f"l{i}_zr", op_type="relu",
+                       inputs=[f"l{i}_z"], out_dim=cfg.d_hidden))
+        z = f"l{i}_zr"
+        if cfg.normalize:
+            g.add(Operator(name=f"l{i}_n", op_type="eltwise",
+                           inputs=[z], attrs={"fn": "l2norm"},
+                           out_dim=cfg.d_hidden))
+            z = f"l{i}_n"
+        g.add(Operator(name=f"l{i}_h", op_type="eltwise",
+                       inputs=[z, "node_mask"], attrs={"fn": "mask"},
+                       out_dim=cfg.d_hidden))
+        h, d = f"l{i}_h", cfg.d_hidden
+    g.add(Operator(name="head", op_type="linear", inputs=[h],
+                   params=dict(params["head"]), out_dim=cfg.n_classes))
+    g.add(Operator(name="out", op_type="output", inputs=["head"],
+                   attrs={"head_names": ["logits"]},
+                   out_dim=cfg.n_classes))
+    g.validate()
+    g.meta["config"] = cfg
+    return g
+
+
 def cfg_frontier_sizes(cfg: GraphSAGEConfig, batch_nodes: int):
     sizes = [batch_nodes]
     for f in cfg.sample_sizes:
@@ -133,3 +189,6 @@ def loss_fn(params, graph, cfg: GraphSAGEConfig, *, sampled=False):
     acc = ((logits.argmax(-1) == labels) * nm).sum() / \
         jnp.maximum(nm.sum(), 1.0)
     return loss, {"loss": loss, "acc": acc}
+
+
+register_exporter("graphsage", to_graph)

@@ -186,6 +186,19 @@ class ShardedTriggerService:
     hits are energy-sorted upstream, so truncation sheds the softest
     hits), and dispatches to that group. The shared in-order releaser
     spans *all* groups, so global submission order survives bucketing.
+
+    ``routes``: heterogeneous-model dispatch. Pass a ``{name:
+    infer_fn}`` dict — each named model gets its own group of
+    ``n_replicas`` replicas behind its own router, and ``submit(event,
+    route=name)`` picks the group (with a single route the argument may
+    be omitted). Unlike ``buckets`` (one model, many launch shapes)
+    this serves *different deployed pipelines* side by side — e.g. the
+    CCN trigger next to an edge-based GNN — behind one shared in-order
+    releaser, so global submission order survives heterogeneous
+    routing. ``warmup_fn`` may be a ``{name: callable}`` dict to warm
+    each route's kernels separately. Mutually exclusive with
+    ``infer_fn`` and ``buckets``. Read per-route intake/completion with
+    ``route_summary()``.
     """
 
     def __init__(self, infer_fn=None, *, n_replicas: int = 1,
@@ -195,7 +208,7 @@ class ShardedTriggerService:
                  policy: str = "round_robin", devices="auto",
                  inflight: int = 2, warmup_fn=None, monitor=False,
                  buckets=None, mask_feed: str = "mask",
-                 loop: str = "deadline"):
+                 routes=None, loop: str = "deadline"):
         if n_replicas < 1:
             raise ValueError("n_replicas must be >= 1")
         if loop not in LOOPS:
@@ -206,7 +219,25 @@ class ShardedTriggerService:
             else ReplicaEngine
         self.mask_feed = mask_feed
         bucket_warmups = None
-        if buckets is not None:
+        route_warmups = None
+        self.routes = ()
+        if routes is not None:
+            if infer_fn is not None or buckets is not None:
+                raise ValueError(
+                    "pass exactly one of infer_fn, buckets= or routes= "
+                    "— routed services dispatch all traffic through "
+                    "the named route executables")
+            route_fns = dict(routes)
+            if not route_fns:
+                raise ValueError("routes must name at least one route")
+            self.routes = tuple(route_fns)
+            if isinstance(warmup_fn, dict):
+                route_warmups = {r: warmup_fn.get(r) for r in self.routes}
+                warmup_fn = None
+            infer_fns = [route_fns[r]
+                         for r in self.routes for _ in range(n_replicas)]
+            self.buckets = ()
+        elif buckets is not None:
             if infer_fn is not None:
                 raise ValueError(
                     "pass either infer_fn or buckets=, not both — "
@@ -232,7 +263,8 @@ class ShardedTriggerService:
         else:
             if infer_fn is None:
                 raise ValueError(
-                    "infer_fn is required unless buckets= is given")
+                    "infer_fn is required unless buckets= or routes= "
+                    "is given")
             self.buckets = ()
             infer_fns = infer_fn if isinstance(infer_fn, (list, tuple)) \
                 else [infer_fn] * n_replicas
@@ -267,6 +299,9 @@ class ShardedTriggerService:
         if bucket_warmups is not None:
             warmup_fns = [bucket_warmups[b]
                           for b in self.buckets for _ in range(n_replicas)]
+        elif route_warmups is not None:
+            warmup_fns = [route_warmups[r]
+                          for r in self.routes for _ in range(n_replicas)]
         else:
             warmup_fns = [warmup_fn] * total
         self.replicas = []
@@ -297,6 +332,15 @@ class ShardedTriggerService:
             # indices within each bucket's replica group.
             self.bucket_counts = {b: 0 for b in self.buckets}
             self.router = None
+        elif self.routes:
+            self._route_groups = {
+                r: self.replicas[gi * n_replicas:(gi + 1) * n_replicas]
+                for gi, r in enumerate(self.routes)}
+            self._route_routers = {
+                r: Router(grp, policy)
+                for r, grp in self._route_groups.items()}
+            self.route_counts = {r: 0 for r in self.routes}
+            self.router = None
         else:
             self.router = Router(self.replicas, policy)
         self._agg = AggregateStats(self.replicas)
@@ -323,7 +367,8 @@ class ShardedTriggerService:
         return pick_bucket(event_occupancy(event, self.mask_feed),
                            self.buckets)
 
-    def submit(self, event: dict, *, truth: bool | None = None) -> Future:
+    def submit(self, event: dict, *, truth: bool | None = None,
+               route: str | None = None) -> Future:
         """Shard the event to a replica; returns a Future that resolves
         in global submission order.  Blocks (backpressure) when the
         chosen replica's bounded queue is full.
@@ -333,11 +378,27 @@ class ShardedTriggerService:
         then round-robins (or least-loads) within that bucket's replica
         group. Ordering is still global across buckets.
 
+        With ``routes``, ``route`` names the model group the event
+        dispatches to (optional when only one route is configured).
+        Ordering is still global across routes.
+
         ``truth``: optional ground-truth trigger bit; with monitoring
         enabled it is matched against the model's decision on release,
         feeding the snapshot's online efficiency / fake-rate."""
         t_submit = time.perf_counter()
         bucket = None
+        if self.routes:
+            if route is None:
+                if len(self.routes) > 1:
+                    raise ValueError(
+                        "route= is required on a multi-route service; "
+                        f"routes: {', '.join(self.routes)}")
+                route = self.routes[0]
+            if route not in self._route_groups:
+                raise KeyError(f"unknown route {route!r}; routes: "
+                               f"{', '.join(self.routes)}")
+        elif route is not None:
+            raise ValueError("service has no routes= configured")
         if self.buckets:
             # classify outside the sequence lock (O(hits) numpy count)
             bucket = pick_bucket(event_occupancy(event, self.mask_feed),
@@ -349,12 +410,16 @@ class ShardedTriggerService:
             self._agg.note_submission(t_submit)
             # pick under the lock so round-robin sees a gap-free seq
             # and least-loaded sees a consistent load snapshot.
-            if bucket is None:
-                replica = self.router.pick(seq)
-            else:
+            if bucket is not None:
                 idx = self.bucket_counts[bucket]
                 self.bucket_counts[bucket] = idx + 1
                 replica = self._bucket_routers[bucket].pick(idx)
+            elif route is not None:
+                idx = self.route_counts[route]
+                self.route_counts[route] = idx + 1
+                replica = self._route_routers[route].pick(idx)
+            else:
+                replica = self.router.pick(seq)
         if truth is not None and self.monitors:
             self._truth[seq] = bool(truth)   # before enqueue: release
             #                      can only happen after the enqueue.
@@ -400,6 +465,21 @@ class ShardedTriggerService:
         recs = [r for m in self.monitors for r in m.displays()]
         recs.sort(key=lambda r: r["event"])
         return recs if n is None else recs[-n:]
+
+    def route_summary(self) -> list[dict]:
+        """Per-route intake/completion view (empty when unrouted)."""
+        out = []
+        for r in self.routes:
+            grp = self._route_groups[r]
+            out.append({
+                "route": r,
+                "replicas": len(grp),
+                "submitted": self.route_counts[r],
+                "completed": sum(e.stats.completed for e in grp),
+                "batches": sum(e.stats.batches for e in grp),
+                "padded_events": sum(e.stats.padded_events for e in grp),
+            })
+        return out
 
     def bucket_summary(self) -> list[dict]:
         """Per-bucket intake/completion view (empty when unbucketed)."""

@@ -29,9 +29,10 @@ import jax
 import numpy as np
 
 from repro.tuning import candidates as cand
-from repro.tuning.cache import (KernelKey, TuningCache, flash_attention_key,
-                                fused_dense_key, gravnet_block_int8_key,
-                                gravnet_block_key, gravnet_key)
+from repro.tuning.cache import (KernelKey, TuningCache, edge_aggregate_key,
+                                flash_attention_key, fused_dense_key,
+                                gravnet_block_int8_key, gravnet_block_key,
+                                gravnet_key)
 
 MIN_GAIN = 0.03
 
@@ -251,6 +252,52 @@ def tune_gravnet_block(n: int, d_hidden: int, d_s: int, d_f: int,
     return best_cfg
 
 
+# --------------------------------------------------------- edge aggregate ----
+def tune_edge_aggregate(n: int, e: int, d: int, *, reduce: str = "sum",
+                        batch: int = 1, dtype: str = "float32",
+                        backend: str = "xla",
+                        cache: TuningCache | None = None, iters: int = 5,
+                        min_gain: float = MIN_GAIN, seed: int = 0) -> dict:
+    """Tune the edge-aggregation kernel at one (n, e, d) problem shape.
+    ``reduce`` rides inside the cached config (like the gravnet-block
+    extras) so serving warm-up can replay the exact problem; the binder
+    only ever reads the (bm, be) knobs."""
+    import jax.numpy as jnp
+
+    from repro.kernels import ops
+    rng = np.random.default_rng(seed)
+    dt = _np_dtype(dtype)
+    if batch > 1:
+        msgs = jnp.asarray(rng.normal(size=(batch, e, d)), dt)
+        ei = jnp.asarray(rng.integers(0, n, size=(batch, 2, e)), jnp.int32)
+        mask = jnp.asarray(rng.uniform(size=(batch, e)) < 0.8, jnp.float32)
+
+        def call(cfg):
+            return ops.edge_aggregate_batched(msgs, ei, n, mask,
+                                              reduce=reduce,
+                                              backend=backend, **cfg)
+    else:
+        msgs = jnp.asarray(rng.normal(size=(e, d)), dt)
+        ei = jnp.asarray(rng.integers(0, n, size=(2, e)), jnp.int32)
+        mask = jnp.asarray(rng.uniform(size=(e,)) < 0.8, jnp.float32)
+
+        def call(cfg):
+            return ops.edge_aggregate(msgs, ei, n, mask, reduce=reduce,
+                                      backend=backend, **cfg)
+
+    cands = cand.edge_aggregate_candidates(n, e, batch=batch)
+    if backend in _KNOB_INERT_BACKENDS:
+        cands = cands[:1]
+    timed = [(cfg, _time_call(lambda c=cfg: call(c), iters=iters))
+             for cfg in cands]
+    key = edge_aggregate_key(n, e, d, dtype, backend, batch=batch)
+    best_cfg, best_t, default_t = _pick(timed, min_gain=min_gain)
+    if cache is not None:
+        cache.put(key, {**best_cfg, "reduce": reduce}, us=best_t * 1e6,
+                  default_us=default_t * 1e6, candidates=len(timed))
+    return best_cfg
+
+
 # -------------------------------------------------------- flash attention ----
 def tune_flash_attention(bh: int, s: int, t: int, d: int, *,
                          causal: bool = True, dtype: str = "float32",
@@ -282,42 +329,19 @@ def tune_flash_attention(bh: int, s: int, t: int, d: int, *,
 # ------------------------------------------------------------ graph walk ----
 def graph_kernel_problems(g, *, n_rows: int, backend: str,
                           batch: int = 1) -> list[KernelKey]:
-    """The tuning problems a deploy-optimized graph emits, derived with
-    the same shape rules ``kernel_opt`` uses when binding kernels.
-    ``batch`` is the packed micro-batch width of a bucketed executable
-    (1 = legacy per-event shapes)."""
-    from repro.core.passes.kernel_opt import (fused_dense_dtype,
-                                              fused_dense_shape)
+    """The tuning problems a deploy-optimized graph emits, derived
+    through the registry's per-spec tuning-key hooks
+    (``op_registry.tuning_problem``) — the exact hooks ``kernel_opt``'s
+    binders key the cache with, so a subsequent deploy hits every
+    entry. ``batch`` is the packed micro-batch width of a bucketed
+    executable (1 = legacy per-event shapes)."""
+    from repro.core.op_registry import tuning_problem
     problems: list[KernelKey] = []
     seen: set[KernelKey] = set()
     for op in g:
-        if op.template == "fused_dense":
-            rows, d_in, d_out = fused_dense_shape(op, n_rows, batch)
-            key = fused_dense_key(rows, d_in, d_out, fused_dense_dtype(op),
-                                  backend)
-        elif op.op_type == "gravnet_aggregate":
-            key = gravnet_key(n_rows, op.attrs["d_s"], op.attrs["d_f"],
-                              op.attrs["k"], "float32", backend,
-                              batch=batch)
-        elif op.op_type == "gravnet_block":
-            if op.precision == "int8":
-                key = gravnet_block_int8_key(n_rows, op.attrs["d_hidden"],
-                                             op.attrs["d_f"],
-                                             op.attrs["k"], backend,
-                                             batch=batch)
-            else:
-                key = gravnet_block_key(n_rows, op.attrs["d_hidden"],
-                                        op.attrs["d_f"], op.attrs["k"],
-                                        "float32", backend, batch=batch)
-        elif op.op_type == "attention":
-            # the executor launches one (B, N, d) flash call per
-            # micro-batch: bh = the packed batch, s = t = n_rows
-            key = flash_attention_key(batch, n_rows, n_rows,
-                                      op.out_dim or 128, "float32",
-                                      backend)
-        else:
-            continue
-        if key not in seen:
+        key = tuning_problem(op, n_rows=n_rows, backend=backend,
+                             batch=batch)
+        if key is not None and key not in seen:
             seen.add(key)
             problems.append(key)
     return problems
@@ -371,6 +395,21 @@ def autotune_graph(g, *, n_rows: int, backend: str, cache: TuningCache,
                                dtype=key.dtype, backend=backend,
                                cache=cache, iters=iters,
                                min_gain=min_gain)
+        elif key.kernel == "edge_aggregate":
+            shape = key.shape
+            kb = shape[0] if len(shape) == 4 else 1
+            n, e, d = shape[-3:]
+            # recover the reduction mode the shape key doesn't carry
+            reduce = "sum"
+            for op in g:
+                if (op.op_type == "edge_aggregate"
+                        and (op.out_dim or 1) == d):
+                    reduce = op.attrs.get("reduce", "sum")
+                    break
+            tune_edge_aggregate(n, e, d, reduce=reduce, batch=kb,
+                                dtype=key.dtype, backend=backend,
+                                cache=cache, iters=iters,
+                                min_gain=min_gain)
         elif key.kernel == "flash_attention":
             bh, s, t, d = key.shape
             tune_flash_attention(bh, s, t, d, dtype=key.dtype,

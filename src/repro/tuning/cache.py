@@ -107,6 +107,18 @@ def gravnet_block_int8_key(n: int, d_hidden: int, d_f: int, k: int,
                      backend)
 
 
+def edge_aggregate_key(n: int, e: int, d: int, dtype: str, backend: str,
+                       batch: int = 1) -> KernelKey:
+    """Key for the edge-aggregation (segment-sum/mean) kernel. ``n`` is
+    the per-event node count, ``e`` the padded edge count, ``d`` the
+    message feature width. Mirrors ``gravnet_key``: ``batch`` prepends
+    the packed micro-batch width (5-dim shape) while ``batch=1`` keeps
+    the per-event 3-dim shape."""
+    if batch > 1:
+        return KernelKey("edge_aggregate", (batch, n, e, d), dtype, backend)
+    return KernelKey("edge_aggregate", (n, e, d), dtype, backend)
+
+
 def flash_attention_key(bh: int, s: int, t: int, d: int, dtype: str,
                         backend: str) -> KernelKey:
     return KernelKey("flash_attention", (bh, s, t, d), dtype, backend)

@@ -165,6 +165,30 @@ def gravnet_block_int8_candidates(n: int, d_hidden: int, d_f: int,
     return _dedup_keep_order(cands)[:max_candidates]
 
 
+def default_edge_aggregate(n: int, e: int, batch: int = 1) -> dict:
+    """Heuristic default for the edge-aggregation kernel: the gravnet
+    row-tile rule (batch-invariant) and a single whole-edge-set chunk —
+    the configuration the executor uses on a cache miss."""
+    return {"bm": min(n, 128)}
+
+
+def edge_aggregate_candidates(n: int, e: int, *, batch: int = 1,
+                              max_candidates: int = 10) -> list[dict]:
+    """Search space: the destination row tile ``bm`` plus the edge-axis
+    chunk ``be``. ``be`` splits the f32 accumulation into ordered
+    chunks (association may move last ulps — it must win on measured
+    time, like fused-dense ``bk``)."""
+    cands = [default_edge_aggregate(n, e, batch)]
+    for bm in _pow2_range(8, 512):
+        if n % bm == 0:        # the kernel asserts n % bm == 0
+            cands.append({"bm": bm})
+    bm0 = default_edge_aggregate(n, e, batch)["bm"]
+    for be in _pow2_range(128, 2048):
+        if be < e and e % be == 0:   # the kernel asserts e % be == 0
+            cands.append({"bm": bm0, "be": be})
+    return _dedup_keep_order(cands)[:max_candidates]
+
+
 def default_flash_attention() -> dict:
     return {"bq": 128, "bk": 128}
 

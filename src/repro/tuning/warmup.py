@@ -139,6 +139,25 @@ def _replay(key, config) -> None:
                 x_scale=0.02, agg_scale=0.01, h_scale=0.02, k=k,
                 activation=activation, concat_x=concat_x,
                 backend=backend, **cfg)
+    elif key.kernel == "edge_aggregate":
+        cfg = dict(config)
+        reduce = cfg.pop("reduce", "sum")
+        if len(key.shape) == 4:   # batched problem: (batch, n, e, d)
+            batch, n, e, d = key.shape
+            msgs = jnp.asarray(rng.normal(size=(batch, e, d)), jnp.float32)
+            ei = jnp.asarray(rng.integers(0, n, size=(batch, 2, e)),
+                             jnp.int32)
+            mask = jnp.ones((batch, e), jnp.float32)
+            out = ops.edge_aggregate_batched(msgs, ei, n, mask,
+                                             reduce=reduce,
+                                             backend=backend, **cfg)
+        else:
+            n, e, d = key.shape
+            msgs = jnp.asarray(rng.normal(size=(e, d)), jnp.float32)
+            ei = jnp.asarray(rng.integers(0, n, size=(2, e)), jnp.int32)
+            mask = jnp.ones((e,), jnp.float32)
+            out = ops.edge_aggregate(msgs, ei, n, mask, reduce=reduce,
+                                     backend=backend, **cfg)
     elif key.kernel == "flash_attention":
         bh, s, t, d = key.shape
         q = jnp.asarray(rng.normal(size=(bh, s, d)), jnp.float32)

@@ -1,0 +1,105 @@
+"""Differential tests for the edge-aggregation kernel.
+
+The jnp reference (``edge_aggregate_ref``) is itself differentially
+pinned to the model-zoo scatter ops (``models.gnn.common.scatter_sum``
+/ ``scatter_mean``) so the deploy path and the eager GNN forwards agree
+by construction; the Pallas one-hot-incidence kernel is then swept
+against the reference on every backend.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops
+from repro.kernels.ref import edge_aggregate_ref
+from repro.models.gnn import common as C
+from tests._numerics import assert_close, backend_sweep
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _problem(n, e, d, *, seed=0, full_mask=False):
+    rng = np.random.default_rng(seed)
+    msgs = jnp.asarray(rng.normal(size=(e, d)), jnp.float32)
+    ei = jnp.asarray(rng.integers(0, n, size=(2, e)), jnp.int32)
+    mask = (jnp.ones((e,), jnp.float32) if full_mask
+            else jnp.asarray(rng.uniform(size=(e,)) < 0.7, jnp.float32))
+    return msgs, ei, mask
+
+
+@pytest.mark.parametrize("reduce", ["sum", "mean"])
+def test_ref_matches_model_zoo_scatter(reduce):
+    n, e, d = 32, 96, 8
+    msgs, ei, mask = _problem(n, e, d)
+    got = edge_aggregate_ref(msgs, ei, n, mask, reduce=reduce)
+    scatter = C.scatter_sum if reduce == "sum" else C.scatter_mean
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(scatter(msgs, ei, n, mask)))
+
+
+@pytest.mark.parametrize("backend", backend_sweep())
+@pytest.mark.parametrize("reduce", ["sum", "mean"])
+def test_kernel_matches_ref(backend, reduce):
+    n, e, d = 32, 128, 16
+    msgs, ei, mask = _problem(n, e, d)
+    want = edge_aggregate_ref(msgs, ei, n, mask, reduce=reduce)
+    got = ops.edge_aggregate(msgs, ei, n, mask, reduce=reduce,
+                             backend=backend)
+    assert_close(got, want, dtype="float32",
+                 context=f"{backend}/{reduce}")
+
+
+@pytest.mark.parametrize("backend", backend_sweep())
+def test_kernel_none_mask_and_ragged_shapes(backend):
+    # n not a multiple of bm, e not a multiple of be: the wrapper pads
+    n, e, d = 50, 90, 6
+    msgs, ei, _ = _problem(n, e, d, seed=3)
+    want = edge_aggregate_ref(msgs, ei, n, reduce="sum")
+    got = ops.edge_aggregate(msgs, ei, n, reduce="sum", bm=32, be=None,
+                             backend=backend)
+    assert_close(got, want, dtype="float32", context=backend)
+
+
+@pytest.mark.parametrize("backend", backend_sweep())
+@pytest.mark.parametrize("reduce", ["sum", "mean"])
+def test_batched_matches_per_event_loop(backend, reduce):
+    b, n, e, d = 3, 32, 64, 8
+    rng = np.random.default_rng(1)
+    msgs = jnp.asarray(rng.normal(size=(b, e, d)), jnp.float32)
+    ei = jnp.asarray(rng.integers(0, n, size=(b, 2, e)), jnp.int32)
+    mask = jnp.asarray(rng.uniform(size=(b, e)) < 0.7, jnp.float32)
+    got = ops.edge_aggregate_batched(msgs, ei, n, mask, reduce=reduce,
+                                     backend=backend)
+    for i in range(b):
+        want = ops.edge_aggregate(msgs[i], ei[i], n, mask[i],
+                                  reduce=reduce, backend=backend)
+        # same cell body, same schedule -> bitwise across the batch dim
+        np.testing.assert_array_equal(np.asarray(got[i]), np.asarray(want),
+                                      err_msg=f"{backend}/{reduce}/ev{i}")
+
+
+@pytest.mark.parametrize("backend",
+                         [b for b in backend_sweep() if b != "xla"])
+def test_edge_chunking_is_close(backend):
+    # a non-default be splits the f32 accumulation into ordered chunks;
+    # tolerance-level agreement is the claim (association may move ulps)
+    n, e, d = 32, 256, 8
+    msgs, ei, mask = _problem(n, e, d, seed=7)
+    want = ops.edge_aggregate(msgs, ei, n, mask, backend=backend)
+    got = ops.edge_aggregate(msgs, ei, n, mask, be=64, backend=backend)
+    assert_close(got, want, dtype="float32", context=f"{backend}/be=64")
+
+
+@pytest.mark.parametrize("backend", backend_sweep())
+def test_padded_edges_do_not_contribute(backend):
+    n, e, d = 16, 48, 4
+    msgs, ei, mask = _problem(n, e, d, seed=5)
+    # zero the masked edges' payload entirely: identical result proves
+    # masked slots never leak through the incidence matmul
+    got = ops.edge_aggregate(msgs, ei, n, mask, backend=backend)
+    zeroed = msgs * mask[:, None]
+    got2 = ops.edge_aggregate(zeroed, ei, n, mask, backend=backend)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(got2))

@@ -1,0 +1,144 @@
+"""Heterogeneous-model serving: one ShardedTriggerService dispatching
+per-route to *different deployed pipelines* (the CCN trigger next to an
+edge-based GNN) behind a single global in-order release stage."""
+import numpy as np
+import jax
+import pytest
+
+from repro.core import caloclusternet as ccn
+from repro.core.graph_ir import export_graph
+from repro.core.passes.parallelize import Requirements
+from repro.core.pipeline import deploy
+from repro.models.gnn import gatedgcn
+from repro.serving import ShardedTriggerService
+
+jax.config.update("jax_platform_name", "cpu")
+
+N, E = 32, 128
+CCN_CFG = ccn.CCNConfig(n_hits=N, n_crystals=576)
+GGCN_CFG = gatedgcn.GatedGCNConfig(n_layers=2, d_hidden=16, d_in=8,
+                                   d_edge_in=4, n_classes=4)
+
+
+def _req():
+    return Requirements(design_point=3, platform="cpu",
+                        precision_policy="fp", n_hits=N,
+                        target_throughput=1e4)
+
+
+@pytest.fixture(scope="module")
+def pipes():
+    ccn_params = ccn.init(jax.random.PRNGKey(0), CCN_CFG)
+    ggcn_params = gatedgcn.init(jax.random.PRNGKey(1), GGCN_CFG)
+    ccn_pipe = deploy(export_graph("caloclusternet", ccn_params, CCN_CFG),
+                      _req())
+    ggcn_pipe = deploy(export_graph("gatedgcn", ggcn_params, GGCN_CFG),
+                       _req())
+    return ccn_pipe, ggcn_pipe
+
+
+def _ccn_events(n, *, seed=0):
+    rng = np.random.default_rng(seed)
+    return [{"hits": rng.normal(size=(N, CCN_CFG.d_in)).astype(np.float32),
+             "mask": (rng.uniform(size=(N,)) < 0.8).astype(np.float32)}
+            for _ in range(n)]
+
+
+def _ggcn_events(n, *, seed=1):
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(n):
+        out.append({
+            "nodes": rng.normal(size=(N, GGCN_CFG.d_in)).astype(np.float32),
+            "edge_index": rng.integers(0, N, size=(2, E)).astype(np.int32),
+            "edges": rng.normal(
+                size=(E, GGCN_CFG.d_edge_in)).astype(np.float32),
+            "node_mask": (rng.uniform(size=(N,)) < 0.8).astype(np.float32),
+            "edge_mask": (rng.uniform(size=(E,)) < 0.7).astype(np.float32),
+        })
+    return out
+
+
+def _stack(events):
+    return {k: np.stack([e[k] for e in events]) for k in events[0]}
+
+
+def test_routed_service_serves_heterogeneous_models(pipes):
+    ccn_pipe, ggcn_pipe = pipes
+    svc = ShardedTriggerService(
+        routes={"ccn": ccn_pipe, "gatedgcn": ggcn_pipe},
+        microbatch=4, window_s=2e-3, devices=None)
+    n_per = 10
+    ccn_ev, ggcn_ev = _ccn_events(n_per), _ggcn_events(n_per)
+    futs = []
+    for i in range(n_per):        # interleave the two model streams
+        futs.append(("ccn", svc.submit(ccn_ev[i], route="ccn")))
+        futs.append(("gatedgcn",
+                     svc.submit(ggcn_ev[i], route="gatedgcn")))
+    results = [(r, f.result(timeout=120)) for r, f in futs]
+    svc.drain()
+
+    # each route's result i equals the direct pipeline on event i
+    direct_ccn = ccn_pipe(_stack(ccn_ev))
+    direct_ggcn = ggcn_pipe(_stack(ggcn_ev))
+    for i in range(n_per):
+        route, out = results[2 * i]
+        assert route == "ccn" and set(out) >= {"beta", "coords", "cps"}
+        np.testing.assert_allclose(np.asarray(out["coords"]),
+                                   np.asarray(direct_ccn["coords"][i]),
+                                   rtol=1e-5, atol=1e-5)
+        route, out = results[2 * i + 1]
+        assert route == "gatedgcn" and set(out) == {"logits"}
+        np.testing.assert_allclose(np.asarray(out["logits"]),
+                                   np.asarray(direct_ggcn["logits"][i]),
+                                   rtol=1e-5, atol=1e-5)
+
+    summary = {row["route"]: row for row in svc.route_summary()}
+    assert set(summary) == {"ccn", "gatedgcn"}
+    for name in summary:
+        assert summary[name]["submitted"] == n_per
+        assert summary[name]["completed"] == n_per
+    assert svc.stats.completed == 2 * n_per
+    svc.close()
+
+
+def test_single_route_needs_no_route_argument(pipes):
+    _, ggcn_pipe = pipes
+    svc = ShardedTriggerService(routes={"gatedgcn": ggcn_pipe},
+                                microbatch=4, window_s=2e-3, devices=None)
+    ev = _ggcn_events(3, seed=7)
+    outs = [svc.submit(e).result(timeout=120) for e in ev]
+    svc.drain()
+    direct = ggcn_pipe(_stack(ev))
+    for i, out in enumerate(outs):
+        np.testing.assert_allclose(np.asarray(out["logits"]),
+                                   np.asarray(direct["logits"][i]),
+                                   rtol=1e-5, atol=1e-5)
+    svc.close()
+
+
+def test_route_argument_validation():
+    def echo(feeds):
+        return {"y": feeds["x"]}
+
+    svc = ShardedTriggerService(routes={"a": echo, "b": echo},
+                                microbatch=2, window_s=1e-3, devices=None)
+    ev = {"x": np.zeros((4,), np.float32)}
+    with pytest.raises(ValueError, match="route= is required"):
+        svc.submit(ev)
+    with pytest.raises(KeyError, match="unknown route 'c'"):
+        svc.submit(ev, route="c")
+    assert svc.submit(ev, route="a").result(timeout=30)["y"].shape == (4,)
+    svc.drain()
+    svc.close()
+
+    plain = ShardedTriggerService(echo, microbatch=2, window_s=1e-3,
+                                  devices=None)
+    with pytest.raises(ValueError, match="no routes"):
+        plain.submit(ev, route="a")
+    plain.close()
+
+    with pytest.raises(ValueError, match="exactly one of"):
+        ShardedTriggerService(echo, routes={"a": echo}, microbatch=2)
+    with pytest.raises(ValueError, match="at least one route"):
+        ShardedTriggerService(routes={}, microbatch=2)

@@ -90,11 +90,24 @@ def _monitoring_rows(d: dict) -> list[tuple[str, object]]:
              f"{100 * d['overhead_frac']:.2f}%")]
 
 
+def _multimodel_rows(d: dict) -> list[tuple[str, object]]:
+    rows: list[tuple[str, object]] = [
+        (f"route {name}: completed / batches",
+         f"{r['completed']} / {r['batches']}")
+        for name, r in d["routes"].items()]
+    rows.append(("multi-model throughput (ev/s)",
+                 f"{d['throughput_ev_s']:,.0f}"))
+    rows.append(("all submitted events released",
+                 bool(d["released_nonzero"])))
+    return rows
+
+
 _HEADLINES = {
     "BENCH_latency.json": _latency_rows,
     "BENCH_batching.json": _batching_rows,
     "BENCH_fusion.json": _fusion_rows,
     "BENCH_monitoring.json": _monitoring_rows,
+    "BENCH_multimodel.json": _multimodel_rows,
 }
 
 
