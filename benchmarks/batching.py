@@ -13,10 +13,20 @@ each (bucket, microbatch) pair, times
                  (``deploy(batch=microbatch)``), i.e. the leading
                  event grid dimension of the batched kernels.
 
+``--mode ragged`` benchmarks the padding-free path instead: the same
+model deployed bucketed (``deploy_bucketed``) vs ragged
+(``deploy(ragged=True)``) on a *high-variance* occupancy profile whose
+event sizes sit just past the bucket caps — the mix where bucket
+quantization is weakest (every event pays the next bucket up, or
+overflows to the largest). ``--check`` gates the ragged path at
+``RAGGED_MIN_SPEEDUP`` × the bucketed events/s.
+
 Prints harness CSV rows (``name,us_per_call,derived``) and, with
 ``--out``, writes the trajectory JSON consumed by CI:
 
     PYTHONPATH=src python benchmarks/batching.py --out BENCH_batching.json
+    PYTHONPATH=src python benchmarks/batching.py --mode ragged \
+        --out BENCH_ragged.json
     PYTHONPATH=src python -m benchmarks.run batching
 """
 from __future__ import annotations
@@ -35,6 +45,13 @@ from benchmarks.common import row, time_fn
 
 BUCKETS = (8, 16, 32)
 MICROBATCHES = (1, 8, 16)
+
+# ragged-vs-bucketed comparison: occupancies one past each bucket cap,
+# so every event pays the next bucket up (or the overflow fallback)
+RAGGED_OCCUPANCIES = (9, 17, 25)
+RAGGED_BATCH = 32
+RAGGED_MICROBATCH = 8
+RAGGED_MIN_SPEEDUP = 1.2
 
 
 def run(out_path: str | None = None, iters: int = 5):
@@ -99,15 +116,72 @@ def run(out_path: str | None = None, iters: int = 5):
     return trajectory
 
 
+def run_ragged(out_path: str | None = None, iters: int = 5):
+    import jax
+
+    import repro.core.caloclusternet as ccn
+    from repro.core.passes.parallelize import Requirements
+    from repro.core.pipeline import deploy, deploy_bucketed
+    from repro.data.belle2 import current_detector, generate, with_occupancy
+
+    cfg = ccn.current_detector_config()
+    gen = with_occupancy(current_detector(), RAGGED_OCCUPANCIES)
+    params = ccn.init(jax.random.PRNGKey(0), cfg)
+    graph = ccn.to_graph(params, cfg)
+    data = generate(gen, RAGGED_BATCH, seed=3)
+    feeds = {"hits": data["feats"], "mask": data["mask"]}
+    req = Requirements(design_point=3, platform="cpu",
+                       precision_policy="fp", n_hits=cfg.n_hits,
+                       target_throughput=5e4, max_latency_s=2e-3)
+
+    bucketed = deploy_bucketed(graph, req, buckets=BUCKETS,
+                               microbatch=RAGGED_MICROBATCH)
+    ragged = deploy(graph, req, batch=RAGGED_MICROBATCH, ragged=True)
+    t_bucket, _ = time_fn(bucketed, feeds, iters=iters)
+    t_ragged, _ = time_fn(ragged, feeds, iters=iters)
+    ev_s_bucket = RAGGED_BATCH / t_bucket
+    ev_s_ragged = RAGGED_BATCH / t_ragged
+    speedup = t_bucket / t_ragged
+    row("ragged_bucketed", t_bucket * 1e6, f"{ev_s_bucket:.0f} ev/s")
+    row("ragged_packed", t_ragged * 1e6,
+        f"{ev_s_ragged:.0f} ev/s speedup {speedup:.2f}x")
+    result = {
+        "mode": "ragged", "detector": "current",
+        "occupancies": list(RAGGED_OCCUPANCIES),
+        "buckets": list(BUCKETS),
+        "batch": RAGGED_BATCH, "microbatch": RAGGED_MICROBATCH,
+        "bucketed_us": t_bucket * 1e6, "ragged_us": t_ragged * 1e6,
+        "bucketed_ev_s": ev_s_bucket, "ragged_ev_s": ev_s_ragged,
+        "speedup": speedup, "min_speedup": RAGGED_MIN_SPEEDUP,
+    }
+    if out_path:
+        with open(out_path, "w") as f:
+            json.dump(result, f, indent=1)
+        print(f"[batching] wrote {out_path}", file=sys.stderr)
+    return result
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default=None)
     ap.add_argument("--iters", type=int, default=5)
+    ap.add_argument("--mode", choices=("bucketed", "ragged"),
+                    default="bucketed")
     ap.add_argument("--check", action="store_true",
-                    help="fail unless batch packing wins at every "
-                         "bucket for microbatch >= 8")
+                    help="bucketed: fail unless batch packing wins at "
+                         "every bucket for microbatch >= 8; ragged: "
+                         "fail unless the ragged path clears "
+                         f"{RAGGED_MIN_SPEEDUP}x the bucketed events/s")
     args = ap.parse_args()
     print("name,us_per_call,derived")
+    if args.mode == "ragged":
+        res = run_ragged(args.out, iters=args.iters)
+        if args.check and res["speedup"] < RAGGED_MIN_SPEEDUP:
+            raise SystemExit(
+                f"ragged: {res['speedup']:.2f}x < required "
+                f"{RAGGED_MIN_SPEEDUP}x vs bucketed on the "
+                f"high-variance profile {RAGGED_OCCUPANCIES}")
+        return
     traj = run(args.out, iters=args.iters)
     if args.check:
         bad = [p for p in traj

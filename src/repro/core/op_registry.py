@@ -267,9 +267,12 @@ def _infer_attention(op, dims, g):
 
 def _infer_cps(op, dims, g):
     heads = op.attrs.get("head_names", [])
-    if len(op.inputs) != len(heads) + 1:
+    # ragged form (passes/ragged.py) consumes (heads..., segids, slots)
+    aux = 2 if op.attrs.get("ragged") else 1
+    if len(op.inputs) != len(heads) + aux:
         raise GraphVerificationError(
-            f"{op.name}: expects {len(heads)} heads + mask, got "
+            f"{op.name}: expects {len(heads)} heads + "
+            f"{'segids/slots' if aux == 2 else 'mask'}, got "
             f"{len(op.inputs)} inputs")
     return op.out_dim or 1
 
@@ -277,6 +280,33 @@ def _infer_cps(op, dims, g):
 def _infer_output(op, dims, g):
     return sum(dims[i] for i in op.inputs
                if g[i].op_type != "cps")
+
+
+def _infer_knn_build(op, dims, g):
+    if len(op.inputs) != 2:
+        raise GraphVerificationError(
+            f"{op.name}: needs (s, segids) inputs")
+    ds = op.attrs.get("d_s")
+    if dims[op.inputs[0]] != ds:
+        raise GraphVerificationError(
+            f"{op.name}: S dim {dims[op.inputs[0]]} != attrs d_s={ds}")
+    return op.attrs["k"]
+
+
+def _infer_knn_aggregate(op, dims, g):
+    if len(op.inputs) != 2:
+        raise GraphVerificationError(
+            f"{op.name}: needs (f, knn) inputs")
+    df = op.attrs.get("d_f")
+    if dims[op.inputs[0]] != df:
+        raise GraphVerificationError(
+            f"{op.name}: FLR dim {dims[op.inputs[0]]} != attrs "
+            f"d_f={df}")
+    if g[op.inputs[1]].op_type != "knn_build":
+        raise GraphVerificationError(
+            f"{op.name}: neighbor input {op.inputs[1]!r} must be a "
+            "knn_build op")
+    return 2 * df
 
 
 def _infer_gather_edge(op, dims, g):
@@ -383,6 +413,27 @@ def _cost_cps(op, n_hits, pb):
     kmax = op.attrs.get("k_max", 8)
     flops = 20.0 * n_hits * kmax + 10.0 * n_hits * math.log2(max(n_hits, 2))
     act = n_hits * 8.0 * pb
+    return flops, act, 0.0
+
+
+def _cost_knn_build(op, n_hits, pb):
+    # gravnet_aggregate's selection half: the (n, n) distance matmul
+    # plus k argmin/knockout sweeps
+    ds = op.attrs.get("d_s", 4)
+    k = op.attrs.get("k", 8)
+    flops = 2.0 * n_hits * n_hits * ds + 10.0 * n_hits * k
+    act = n_hits * (ds + 2.0 * k) * pb
+    return flops, act, 0.0
+
+
+def _cost_knn_aggregate(op, n_hits, pb):
+    # gravnet_aggregate's aggregation half: k one-hot (n, n) @ (n, df)
+    # selection matmuls plus the weighting sweeps
+    d_out = op.out_dim or 1
+    df = op.attrs.get("d_f", d_out // 2)
+    k = op.attrs.get("k", 8)
+    flops = 2.0 * n_hits * n_hits * k * df + 10.0 * n_hits * k
+    act = n_hits * (df + d_out + 2.0 * k) * pb
     return flops, act, 0.0
 
 
@@ -544,6 +595,30 @@ def _bind_edge_aggregate(op, ctx: BindContext):
                 op.attrs_opt[knob] = tuned[knob]
 
 
+def _bind_knn_build(op, ctx: BindContext):
+    # cache-only bm binding (the wrapper's own default is the
+    # heuristic; a miss leaves attrs_opt untouched)
+    if ctx.cache is None:
+        return
+    from repro.tuning.cache import knn_build_key
+    tuned = ctx.cache.lookup(knn_build_key(
+        ctx.n_rows, op.attrs["d_s"], op.attrs["k"], "float32",
+        ctx.backend, batch=ctx.batch))
+    if tuned is not None and "bm" in tuned:
+        op.attrs_opt["bm"] = tuned["bm"]
+
+
+def _bind_knn_aggregate(op, ctx: BindContext):
+    if ctx.cache is None:
+        return
+    from repro.tuning.cache import knn_aggregate_key
+    tuned = ctx.cache.lookup(knn_aggregate_key(
+        ctx.n_rows, op.attrs["d_f"], op.attrs["k"], "float32",
+        ctx.backend, batch=ctx.batch))
+    if tuned is not None and "bm" in tuned:
+        op.attrs_opt["bm"] = tuned["bm"]
+
+
 def _key_fused_dense(op, n_rows, backend, batch):
     from repro.core.passes.kernel_opt import (fused_dense_dtype,
                                               fused_dense_shape)
@@ -584,6 +659,18 @@ def _key_edge_aggregate(op, n_rows, backend, batch):
     return edge_aggregate_key(n_rows, _n_edges(op, n_rows),
                               op.out_dim or 1, "float32", backend,
                               batch=batch)
+
+
+def _key_knn_build(op, n_rows, backend, batch):
+    from repro.tuning.cache import knn_build_key
+    return knn_build_key(n_rows, op.attrs["d_s"], op.attrs["k"],
+                         "float32", backend, batch=batch)
+
+
+def _key_knn_aggregate(op, n_rows, backend, batch):
+    from repro.tuning.cache import knn_aggregate_key
+    return knn_aggregate_key(n_rows, op.attrs["d_f"], op.attrs["k"],
+                             "float32", backend, batch=batch)
 
 
 # templates whose binder/tuning key is picked by the *template* the
@@ -680,6 +767,29 @@ register_op(OpSpec(
 register_op(OpSpec(
     "cps", templates=_both("xla_cps"),
     infer=_infer_cps, cost=_cost_cps))
+
+# --- ragged / padding-free event path (passes/ragged.py) ----------------
+register_op(OpSpec(
+    # neighbor selection over bin-packed ragged events: data-dependent
+    # like gravnet_aggregate, and regular under the same TPU-native
+    # reformulation (iterated argmin over a dense distance matrix).
+    # Both templates exchange COMPACT tensors — the op's value is an
+    # (idx, d2) index tuple, which no retile may ever land on (see
+    # passes/mapping.py).
+    "knn_build", tpu_native_regular=True,
+    templates={"mxu": "knn_build_kernel", "xla": "xla_knn_build"},
+    infer=_infer_knn_build, cost=_cost_knn_build,
+    mxu_matmul=True, mxu_eff=_eff_gravnet,
+    bind=_bind_knn_build, tuning_key=_key_knn_build))
+register_op(OpSpec(
+    # Gaussian-potential aggregation over knn_build's indices: one-hot
+    # selection matmuls, same classification as gravnet_aggregate.
+    # Compact layout on both targets (its knn input is a tuple).
+    "knn_aggregate", tpu_native_regular=True,
+    templates={"mxu": "knn_agg_kernel", "xla": "xla_knn_agg"},
+    infer=_infer_knn_aggregate, cost=_cost_knn_aggregate,
+    mxu_matmul=True, mxu_eff=_eff_gravnet,
+    bind=_bind_knn_aggregate, tuning_key=_key_knn_aggregate))
 
 # --- edge-based message passing (GatedGCN / GraphSAGE family) -----------
 register_op(OpSpec(

@@ -104,6 +104,10 @@ class _Executor:
                        if isinstance(v, QTensor) else v[..., :d])
         elif t == "gravnet_aggregate":
             out = self._gravnet(op, vals, prec)
+        elif t == "knn_build":
+            out = self._knn_build(op, vals)
+        elif t == "knn_aggregate":
+            out = self._knn_aggregate(op, vals, prec)
         elif t == "gravnet_block":
             out = self._gravnet_block(op, vals, prec)
         elif t == "attention":
@@ -129,7 +133,10 @@ class _Executor:
                     if op_spec(t) is not None else "unknown op type")
             raise ValueError(f"no executor for op {op.name!r} "
                              f"({t!r}: {hint})")
-        if record is not None and t not in ("cps", "output", "input"):
+        # knn_build's value is an (idx, d2) index tuple, not an
+        # activation — nothing to record (and _as_fp would reject it)
+        if record is not None and t not in ("cps", "output", "input",
+                                            "knn_build"):
             record[op.name] = float(jnp.max(jnp.abs(_as_fp(out))))
         return out
 
@@ -207,12 +214,47 @@ class _Executor:
             agg = jnp.clip(jnp.round(agg / sc), -127, 127) * sc
         return agg
 
+    def _knn_build(self, op, vals):
+        """Ragged neighbor selection over bin-packed events: one
+        batched launch per micro-batch of bins. Returns the (idx, d2)
+        tuple the paired knn_aggregate consumes."""
+        s, segids = vals
+        sf = _as_fp(s)[..., :op.attrs["d_s"]]   # lane128-padded producer
+        return kops.knn_build_batched(
+            sf, segids.astype(jnp.int32), k=op.attrs["k"],
+            bm=op.attrs_opt.get("bm"), backend=self.backend)
+
+    def _knn_aggregate(self, op, vals, prec):
+        f, knn = vals
+        idx, d2 = knn
+        ff = _as_fp(f)[..., :op.attrs["d_f"]]
+        agg = kops.knn_aggregate_batched(
+            ff, idx, d2, scale=op.attrs["scale"],
+            bm=op.attrs_opt.get("bm"), backend=self.backend)
+        if prec == "int8" and "act_scale" in op.attrs:
+            # mirror gravnet_aggregate's 8-bit fabric arithmetic
+            sc = op.attrs["act_scale"]
+            agg = jnp.clip(jnp.round(agg / sc), -127, 127) * sc
+        return agg
+
     def _gravnet_block(self, op, vals, prec="fp"):
         """One fused GravNet block — a single megakernel launch for the
         whole micro-batch. A calibrated int8 block (``ws_q`` present)
         launches the quantized megakernel with its baked scales; the fp
         path (and any uncalibrated int8 block) runs the f32 kernel."""
         x, mask = vals
+        if op.attrs.get("ragged"):
+            # raggedized block: the mask slot carries segment ids and
+            # the launch covers a micro-batch of packed bins
+            p = op.params
+            xf = _as_fp(x)[..., :p["ws"].shape[0]]
+            return kops.gravnet_block_ragged(
+                xf, mask.astype(jnp.int32), p["ws"], p["bs"], p["wf"],
+                p["bf"], p["wo"], p["bo"], k=op.attrs["k"],
+                scale=op.attrs["scale"],
+                activation=op.attrs.get("activation", "none"),
+                concat_x=op.attrs.get("concat_x", True),
+                bm=op.attrs_opt.get("bm"), backend=self.backend)
         p = op.params
         dh = p["ws"].shape[0]
         xf = _as_fp(x)[..., :dh]        # lane128-padded producer
@@ -319,12 +361,40 @@ class _Executor:
 
     def _cps(self, op, vals):
         names = op.attrs["head_names"]
-        mask = vals[-1]
         hv = {n: _as_fp(vals[i]) for i, n in enumerate(names)}
+        if op.attrs.get("ragged"):
+            return self._cps_ragged(hv, vals[-2], vals[-1])
+        mask = vals[-1]
         outputs = {
             "beta_logit": hv["beta"][..., 0],
             "coords": hv["coords"],
             "energy": hv["energy"][..., 0],
+        }
+        return ccn.cps(outputs, mask, self.cfg)
+
+    def _cps_ragged(self, hv, segids, slots):
+        """Scatter packed rows back to per-event (E, n_hits) layout,
+        then run the unchanged per-event condensation. JAX *wraps*
+        negative scatter indices even under ``mode="drop"``, so pad
+        rows (segid −1) are first remapped to the out-of-bounds index
+        ``e_max`` — which drop then discards."""
+        e_max = int(self.g.meta["ragged_max_events"])
+        n = self.req.n_hits
+        seg = segids.reshape(-1).astype(jnp.int32)
+        slot = slots.reshape(-1).astype(jnp.int32)
+        seg = jnp.where(seg < 0, e_max, seg)
+
+        def scatter(h):
+            h2 = h.reshape(-1, *h.shape[2:])
+            out = jnp.zeros((e_max, n, *h2.shape[1:]), h2.dtype)
+            return out.at[seg, slot].set(h2, mode="drop")
+
+        mask = jnp.zeros((e_max, n), jnp.float32
+                         ).at[seg, slot].set(1.0, mode="drop")
+        outputs = {
+            "beta_logit": scatter(hv["beta"])[..., 0],
+            "coords": scatter(hv["coords"]),
+            "energy": scatter(hv["energy"])[..., 0],
         }
         return ccn.cps(outputs, mask, self.cfg)
 
@@ -562,7 +632,8 @@ def deploy(model_graph: Graph, req: Requirements, *,
            calibration_feeds=None, kernel_backend: str | None = None,
            tuning_cache=None, batch: int = 1,
            fuse_gravnet_block: bool = True,
-           fuse_int8: bool = True) -> CompiledPipeline:
+           fuse_int8: bool = True, ragged: bool = False,
+           max_events: int | None = None):
     """Run the design flow and emit one executable.
 
     ``batch > 1`` emits a *batch-packed* executable: kernels are bound
@@ -583,10 +654,27 @@ def deploy(model_graph: Graph, req: Requirements, *,
     within calibration tolerance (tested). ``fuse_int8=False`` is the
     int8-specific escape hatch — mixed deployments keep the legacy
     unfused int8 dense chain and its tuning keys bit-for-bit while fp
-    deployments still fuse."""
+    deployments still fuse.
+
+    ``ragged=True`` emits a *padding-free* executable: after fusion
+    the graph is raggedized (``passes.ragged``) to consume the
+    bin-packed event layout of ``data/ragged.py`` — whole events
+    first-fit packed into ``req.n_hits``-row bins, kNN neighbors
+    selected on-device by the ``knn_build`` kernel with segment
+    masking. ``batch`` then means *bins per launch* (not events), and
+    ``max_events`` fixes the static per-launch event capacity of the
+    condensation scatter (default ``2 * batch`` — a launch holding
+    more events is split, never truncated). The returned
+    ``RaggedPipeline`` accepts either a ``data.ragged.RaggedBatch`` or
+    the padded ``{hits, mask}`` feeds and reproduces the padded
+    pipeline's output structure."""
     import os as _os
     backend = (kernel_backend or _os.environ.get("REPRO_BACKEND")
                or ("pallas" if req.platform == "tpu" else "xla"))
+    if ragged and req.precision_policy == "mixed":
+        raise NotImplementedError(
+            "deploy(ragged=True) does not support the mixed precision "
+            "policy yet (no quantized ragged megakernel)")
     from repro.core.passes.verify import verify
     verify(model_graph)  # legality check before any rewrite
     g = model_graph
@@ -599,6 +687,11 @@ def deploy(model_graph: Graph, req: Requirements, *,
             or (fuse_int8 and calibration_feeds is not None))
         g = fuse(g, gravnet_block=block)
         verify(g)        # fusion must preserve well-formedness
+    if ragged:
+        from repro.core.passes.ragged import raggedize
+        g = raggedize(g)
+        verify(g)    # the rewrite must preserve well-formedness too
+        g.meta["ragged_max_events"] = int(max_events or 2 * batch)
     g = partition(g, tpu_native_gravnet=req.tpu_native_gravnet)
     g = apply_precision_policy(
         g, policy="mixed" if req.precision_policy == "mixed" else "fp")
@@ -619,6 +712,11 @@ def deploy(model_graph: Graph, req: Requirements, *,
         if calibration_feeds is None:
             raise ValueError("mixed precision requires calibration_feeds")
         pipe.calibrate(calibration_feeds)
+    if ragged:
+        return RaggedPipeline(pipe, batch=batch,
+                              max_events=g.meta["ragged_max_events"],
+                              capacity=req.n_hits,
+                              example_feeds=calibration_feeds)
     return pipe
 
 
@@ -780,3 +878,131 @@ def deploy_bucketed(model_graph: Graph, req: Requirements, *,
                           fuse_int8=fuse_int8)
     return BucketedPipeline(pipes, microbatch=microbatch,
                             example_feeds=calibration_feeds)
+
+
+# ------------------------------------------------------- ragged deployment ----
+class RaggedPipeline:
+    """Padding-free bin-packed deployment (see ``deploy(ragged=True)``).
+
+    Wraps one raggedized ``CompiledPipeline`` whose launch shape is a
+    fixed number of ``capacity``-row bins. ``__call__`` accepts either
+    a ``data.ragged.RaggedBatch`` (concatenated hits + CSR offsets) or
+    the padded ``{hits, mask}`` feeds; events are first-fit packed
+    whole into bins, launches are capped at the executable's bin count
+    *and* at ``max_events`` events (the condensation scatter's static
+    event capacity — overflow splits launches, never truncates an
+    event), and per-event results are scattered back so the output
+    matches the dense pipeline's structure:
+    ``{head: (n_events, capacity, d), 'cps': {…: (n_events, …)}}``.
+    """
+
+    def __init__(self, pipe: CompiledPipeline, *, batch: int,
+                 max_events: int, capacity: int,
+                 example_feeds: dict | None = None):
+        if not pipe.graph.meta.get("ragged"):
+            raise ValueError("RaggedPipeline needs a raggedized graph "
+                             "(deploy(ragged=True) builds one)")
+        self.pipe = pipe
+        # bins per launch = the executable's microbatch, so every call
+        # is exactly one chunk (no zero-padding: an all-zero pad bin
+        # would alias segment id 0)
+        self.batch = int(pipe.microbatch)
+        self.max_events = int(max_events)
+        self.capacity = int(capacity)
+        self._example = example_feeds
+
+    # ------------------------------------------------------------ planning --
+    def _plan_launches(self, counts) -> list[tuple[int, int]]:
+        """Split the event stream into contiguous ``[i, j)`` launch
+        ranges by simulating the same first-fit packing ``bin_pack``
+        performs, closing a launch when the next event would need a
+        ``batch+1``-th bin or exceed ``max_events``."""
+        launches = []
+        start, n_ev, free = 0, 0, []
+        for e, c in enumerate(counts):
+            c = int(c)
+            if c > self.capacity:
+                raise ValueError(
+                    f"event {e} has {c} hits > bin capacity "
+                    f"{self.capacity} — it cannot be packed")
+            placed = False
+            for i, f in enumerate(free):
+                if c <= f:
+                    free[i] -= c
+                    placed = True
+                    break
+            needs_bin = not placed
+            if (needs_bin and len(free) == self.batch) \
+                    or n_ev == self.max_events:
+                launches.append((start, e))
+                start, n_ev, free = e, 0, []
+                needs_bin = True
+            if needs_bin:
+                free.append(self.capacity - c)
+            n_ev += 1
+        if n_ev or not launches:
+            launches.append((start, start + n_ev))
+        return launches
+
+    # --------------------------------------------------------------- infer --
+    def __call__(self, feeds):
+        import numpy as np
+
+        from repro.data.ragged import (RaggedBatch, bin_pack, pack_events,
+                                       unpack_binned)
+        if isinstance(feeds, RaggedBatch):
+            rb = feeds
+        else:
+            rb = pack_events(np.asarray(feeds["hits"]),
+                             np.asarray(feeds["mask"]))
+        counts = rb.counts()
+        offs = np.asarray(rb.offsets)
+        parts = []
+        for i, j in self._plan_launches(counts):
+            sub = RaggedBatch(feats=rb.feats[offs[i]:offs[j]],
+                              offsets=offs[i:j + 1] - offs[i])
+            bp = bin_pack(sub, self.capacity, n_bins=self.batch)
+            mask = (np.asarray(bp.segids) >= 0).astype(np.float32)
+            out = self.pipe({"hits": jnp.asarray(bp.feats),
+                             "mask": jnp.asarray(mask),
+                             "segids": jnp.asarray(bp.segids),
+                             "slots": jnp.asarray(bp.slots)})
+            n_ev = j - i
+            part = {}
+            for name, v in out.items():
+                if name == "cps":
+                    part[name] = {k: np.asarray(a)[:n_ev]
+                                  for k, a in v.items()}
+                else:
+                    part[name] = unpack_binned(
+                        np.asarray(v), np.asarray(bp.segids),
+                        np.asarray(bp.slots), n_ev, self.capacity)
+            parts.append(part)
+        if len(parts) == 1:
+            return parts[0]
+        return jax.tree_util.tree_map(
+            lambda *xs: np.concatenate(xs, axis=0), *parts)
+
+    # -------------------------------------------------------------- warmup --
+    def warmup(self) -> int:
+        """Pre-compile the (batch × capacity)-bin executable so the
+        first real submission never pays jit tracing. Uses the example
+        feeds when given, else a synthetic full-occupancy batch."""
+        import numpy as np
+        if self._example is not None:
+            feeds = {k: np.asarray(v) for k, v in self._example.items()
+                     if k in ("hits", "mask")}
+        else:
+            rng = np.random.default_rng(0)
+            d = self.pipe.graph["hits"].out_dim
+            feeds = {"hits": rng.normal(size=(self.batch, self.capacity,
+                                              d)).astype(np.float32),
+                     "mask": np.ones((self.batch, self.capacity),
+                                     np.float32)}
+        jax.block_until_ready(jax.tree_util.tree_leaves(
+            jax.tree_util.tree_map(jnp.asarray, self(feeds))))
+        return 1
+
+    # ----------------------------------------------------------- reporting --
+    def resource_report(self):
+        return self.pipe.resource_report()

@@ -147,3 +147,38 @@ def event_stream(cfg: Belle2Config, batch: int, *, seed0: int = 0):
     while True:
         yield generate(cfg, batch, seed0 + step)
         step += 1
+
+
+def generate_ragged(cfg: Belle2Config, batch: int, seed: int):
+    """One ragged (CSR) batch: the padded batch with its padding
+    stripped. Returns ``{"ragged": RaggedBatch, "trigger_truth": (B,)}``
+    plus the per-hit truth arrays concatenated in the same CSR order
+    (``object_id``, ``energy``, ``cls`` — each ``(R,)``).
+
+    Round-trips exactly against the padded form:
+    ``ragged.unpack_events(out["ragged"], cfg.n_hits)`` reproduces
+    ``generate(...)``'s feats/mask bit-for-bit (tested), because
+    generated events are hit-prefix-packed already.
+    """
+    from repro.data.ragged import pack_events
+
+    data = generate(cfg, batch, seed)
+    rb = pack_events(data["feats"], data["mask"])
+    ev, hit = np.nonzero(data["mask"] > 0)
+    return {"ragged": rb,
+            "object_id": data["object_id"][ev, hit],
+            "energy": data["energy"][ev, hit],
+            "cls": data["cls"][ev, hit],
+            "trigger_truth": data["trigger_truth"]}
+
+
+def event_stream_ragged(cfg: Belle2Config, batch: int, *, seed0: int = 0):
+    """Ragged (CSR) companion of :func:`event_stream`: yields
+    :func:`generate_ragged` batches — concatenated hits + per-event
+    offsets, no padding on the wire. Seeded identically, so stream
+    step ``t`` here is the padded stream's step ``t`` minus its
+    padding."""
+    step = 0
+    while True:
+        yield generate_ragged(cfg, batch, seed0 + step)
+        step += 1

@@ -6,6 +6,8 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro.data.ragged import group_by_segment
+
 
 # ----------------------------------------------------------- generators ----
 def powerlaw_graph(n_nodes: int, n_edges: int, *, d_feat: int,
@@ -110,10 +112,9 @@ class NeighborSampler:
     def __init__(self, edge_index, n_nodes: int, feats, labels,
                  *, fanouts, seed: int = 0):
         src, dst = np.asarray(edge_index)
-        order = np.argsort(dst, kind="stable")
-        self.nbr = src[order]
-        counts = np.bincount(dst, minlength=n_nodes)
-        self.offs = np.concatenate([[0], np.cumsum(counts)])
+        # in-neighbor CSR: the same grouping the ragged event packer
+        # uses (data/ragged.py), segments = destination nodes
+        self.nbr, self.offs = group_by_segment(src, dst, n_nodes)
         self.feats = feats
         self.labels = labels
         self.fanouts = tuple(fanouts)

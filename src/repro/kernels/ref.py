@@ -114,6 +114,65 @@ def gravnet_aggregate_ref(s, f, mask, *, k=8, scale=10.0, out_dtype=None):
     return jnp.concatenate([mean, mx], axis=1).astype(out_dtype)
 
 
+# -------------------------------------------------------------- kNN build ----
+def knn_build_ref(s, segids, *, k=8):
+    """jnp oracle for the ragged neighbor-selection kernel
+    (kernels/knn_build.py). s:(N,ds), segids:(N,) int (−1 = padding)
+    -> (idx:(N,k) i32, d2:(N,k) f32).
+
+    Pins the TIE-BREAK CONTRACT: k iterations of row-argmin with
+    knockout, ties broken toward the *lowest column index*
+    (``jnp.argmin``). A candidate is valid iff it shares the row's
+    segment id, is not the row itself, and is not padding; rows with
+    fewer than k candidates fill remaining slots with d2 = 1e30 and
+    idx = argmin of an all-invalid row (0 after full knockout wraps —
+    consumers must gate on d2, never on idx alone).
+    """
+    sf = s.astype(jnp.float32)
+    seg = segids.astype(jnp.int32)
+    n = sf.shape[0]
+    d2 = (jnp.sum(sf * sf, 1)[:, None] + jnp.sum(sf * sf, 1)[None, :]
+          - 2.0 * sf @ sf.T)
+    d2 = jnp.maximum(d2, 0.0)
+    invalid = ((seg[None, :] != seg[:, None]) | jnp.eye(n, dtype=bool)
+               | (seg[None, :] < 0))
+    d2 = jnp.where(invalid, _BIG, d2)
+    col = jnp.arange(n)[None, :]
+    idx_cols, d2_cols = [], []
+    for _ in range(k):             # static loop, mirrors the kernel
+        dmin = jnp.min(d2, axis=1)
+        amin = jnp.argmin(d2, axis=1).astype(jnp.int32)
+        idx_cols.append(amin)
+        d2_cols.append(dmin)
+        d2 = jnp.where(col == amin[:, None], _BIG, d2)
+    return jnp.stack(idx_cols, axis=1), jnp.stack(d2_cols, axis=1)
+
+
+def knn_aggregate_ref(f, idx, d2, *, scale=10.0, out_dtype=None):
+    """jnp oracle for the ragged aggregation kernel: Gaussian-potential
+    mean/max over the selected neighbors. f:(N,df), idx/d2:(N,k)
+    -> (N, 2·df). Invalid slots (d2 >= 1e30/2) weigh 0. Accumulates
+    neighbor-by-neighbor in slot order — the same sequence of adds the
+    Pallas cell (and ``_gravnet_cell``) performs — so oracle and kernel
+    agree to the last ULP (exact up to XLA's multiply-add fusion)."""
+    out_dtype = out_dtype or f.dtype
+    ff = f.astype(jnp.float32)
+    n, k = idx.shape
+    mean_acc = jnp.zeros((n, ff.shape[1]), jnp.float32)
+    max_acc = jnp.full((n, ff.shape[1]), -_BIG, jnp.float32)
+    for t in range(k):
+        dmin = d2[:, t]
+        fsel = jnp.take(ff, idx[:, t], axis=0)               # (n, df)
+        valid = dmin < _BIG * 0.5
+        w = jnp.where(valid, jnp.exp(-scale * dmin), 0.0)
+        wf = w[:, None] * fsel
+        mean_acc = mean_acc + wf
+        max_acc = jnp.maximum(max_acc, jnp.where(valid[:, None], wf, -_BIG))
+    mean = mean_acc / k
+    mx = jnp.where(max_acc <= -_BIG * 0.5, 0.0, max_acc)
+    return jnp.concatenate([mean, mx], axis=1).astype(out_dtype)
+
+
 # ------------------------------------------------------------ gravnet block ----
 def gravnet_block_ref(x, mask, ws, bs, wf, bf, wo, bo, *, k=8, scale=10.0,
                       activation="relu", concat_x=True, out_dtype=None):

@@ -199,6 +199,18 @@ class ShardedTriggerService:
     each route's kernels separately. Mutually exclusive with
     ``infer_fn`` and ``buckets``. Read per-route intake/completion with
     ``route_summary()``.
+
+    ``ragged``: padding-free dispatch. Pass a
+    ``core.pipeline.RaggedPipeline`` (from ``deploy(ragged=True)``) —
+    submissions of *any* occupancy share one replica group, and each
+    micro-batch bin-packs the events' actual hits on dispatch instead
+    of padding every event to a bucket cap. High-variance occupancy
+    mixes stop paying bucket quantization, and an event larger than
+    every bucket cap is served exactly (no overflow-to-largest-bucket
+    truncation). Host-side the protocol still stacks events at the
+    detector's full hit capacity; the packing happens before the
+    device launch, where the padding actually costs. Mutually
+    exclusive with ``infer_fn``, ``buckets`` and ``routes``.
     """
 
     def __init__(self, infer_fn=None, *, n_replicas: int = 1,
@@ -208,7 +220,7 @@ class ShardedTriggerService:
                  policy: str = "round_robin", devices="auto",
                  inflight: int = 2, warmup_fn=None, monitor=False,
                  buckets=None, mask_feed: str = "mask",
-                 routes=None, loop: str = "deadline"):
+                 routes=None, ragged=None, loop: str = "deadline"):
         if n_replicas < 1:
             raise ValueError("n_replicas must be >= 1")
         if loop not in LOOPS:
@@ -221,7 +233,24 @@ class ShardedTriggerService:
         bucket_warmups = None
         route_warmups = None
         self.routes = ()
-        if routes is not None:
+        self.ragged = ragged is not None
+        if ragged is not None:
+            if (infer_fn is not None or buckets is not None
+                    or routes is not None):
+                raise ValueError(
+                    "pass exactly one of infer_fn, buckets=, routes= "
+                    "or ragged= — a ragged service dispatches all "
+                    "traffic through the padding-free executable")
+            if not hasattr(ragged, "capacity"):
+                raise TypeError(
+                    "ragged= expects a core.pipeline.RaggedPipeline "
+                    "(deploy(ragged=True) builds one)")
+            self._ragged_capacity = int(ragged.capacity)
+            if warmup_fn is None and hasattr(ragged, "warmup"):
+                warmup_fn = ragged.warmup
+            self.buckets = ()
+            infer_fns = [ragged] * n_replicas
+        elif routes is not None:
             if infer_fn is not None or buckets is not None:
                 raise ValueError(
                     "pass exactly one of infer_fn, buckets= or routes= "
@@ -404,6 +433,11 @@ class ShardedTriggerService:
             bucket = pick_bucket(event_occupancy(event, self.mask_feed),
                                  self.buckets)
             event = self._cut_event(event, bucket)
+        elif self.ragged:
+            # normalize every submission to the full hit capacity so
+            # the batch loop can stack mixed occupancies; the ragged
+            # executable re-packs actual hits before the launch
+            event = self._cut_event(event, self._ragged_capacity)
         with self._seq_lock:
             seq = self._seq
             self._seq += 1

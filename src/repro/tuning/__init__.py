@@ -17,18 +17,21 @@ design point ③; ``serving`` warms engines from the cache;
 """
 from repro.tuning.autotune import (autotune_graph, graph_kernel_problems,
                                    tune_flash_attention, tune_fused_dense,
-                                   tune_gravnet, tune_gravnet_block)
+                                   tune_gravnet, tune_gravnet_block,
+                                   tune_knn_aggregate, tune_knn_build)
 from repro.tuning.cache import (SCHEMA_VERSION, KernelKey, TuningCache,
                                 TuningEntry, flash_attention_key,
                                 fused_dense_key, gravnet_block_int8_key,
-                                gravnet_block_key, gravnet_key)
+                                gravnet_block_key, gravnet_key,
+                                knn_aggregate_key, knn_build_key)
 from repro.tuning.warmup import make_warmup, warm_from_cache
 
 __all__ = [
     "SCHEMA_VERSION", "KernelKey", "TuningCache", "TuningEntry",
     "autotune_graph", "flash_attention_key", "fused_dense_key",
     "graph_kernel_problems", "gravnet_block_int8_key",
-    "gravnet_block_key", "gravnet_key", "make_warmup",
-    "tune_flash_attention", "tune_fused_dense", "tune_gravnet",
-    "tune_gravnet_block", "warm_from_cache",
+    "gravnet_block_key", "gravnet_key", "knn_aggregate_key",
+    "knn_build_key", "make_warmup", "tune_flash_attention",
+    "tune_fused_dense", "tune_gravnet", "tune_gravnet_block",
+    "tune_knn_aggregate", "tune_knn_build", "warm_from_cache",
 ]

@@ -32,7 +32,8 @@ from repro.tuning import candidates as cand
 from repro.tuning.cache import (KernelKey, TuningCache, edge_aggregate_key,
                                 flash_attention_key, fused_dense_key,
                                 gravnet_block_int8_key, gravnet_block_key,
-                                gravnet_key)
+                                gravnet_key, knn_aggregate_key,
+                                knn_build_key)
 
 MIN_GAIN = 0.03
 
@@ -298,6 +299,103 @@ def tune_edge_aggregate(n: int, e: int, d: int, *, reduce: str = "sum",
     return best_cfg
 
 
+# ------------------------------------------------------------- ragged kNN ----
+def _ragged_segids(rng, shape) -> np.ndarray:
+    """Representative bin-packed segment ids: a few contiguous events
+    per bin with a padded tail (the layout ``data/ragged.bin_pack``
+    emits), so tuning measurements see realistic masking."""
+    n = shape[-1]
+    seg = np.full(shape, -1, np.int32)
+    flat = seg.reshape(-1, n)
+    for row in flat:
+        fill = int(rng.integers(n // 2, n + 1))
+        cuts = np.sort(rng.choice(np.arange(1, fill), size=min(2, fill - 1),
+                                  replace=False)) if fill > 2 else []
+        prev, ev = 0, 0
+        for c in list(cuts) + [fill]:
+            row[prev:c] = ev
+            prev, ev = c, ev + 1
+    return seg
+
+
+def tune_knn_build(n: int, d_s: int, k: int, *, batch: int = 1,
+                   dtype: str = "float32", backend: str = "xla",
+                   cache: TuningCache | None = None, iters: int = 5,
+                   min_gain: float = MIN_GAIN, seed: int = 0) -> dict:
+    """Tune the ragged-path neighbor-selection kernel. ``n`` is the bin
+    capacity, ``batch`` the bin count of the batched launch."""
+    import jax.numpy as jnp
+
+    from repro.kernels import ops
+    rng = np.random.default_rng(seed)
+    dt = _np_dtype(dtype)
+    if batch > 1:
+        s = jnp.asarray(rng.normal(size=(batch, n, d_s)), dt)
+        seg = jnp.asarray(_ragged_segids(rng, (batch, n)))
+
+        def call(cfg):
+            return ops.knn_build_batched(s, seg, k=k, backend=backend,
+                                         **cfg)
+    else:
+        s = jnp.asarray(rng.normal(size=(n, d_s)), dt)
+        seg = jnp.asarray(_ragged_segids(rng, (1, n))[0])
+
+        def call(cfg):
+            return ops.knn_build(s, seg, k=k, backend=backend, **cfg)
+
+    cands = cand.knn_build_candidates(n, batch=batch)
+    if backend in _KNOB_INERT_BACKENDS:
+        cands = cands[:1]
+    timed = [(cfg, _time_call(lambda c=cfg: call(c), iters=iters))
+             for cfg in cands]
+    key = knn_build_key(n, d_s, k, dtype, backend, batch=batch)
+    return _finish(cache, key, timed, min_gain=min_gain)
+
+
+def tune_knn_aggregate(n: int, d_f: int, k: int, *, batch: int = 1,
+                       scale: float = 10.0, dtype: str = "float32",
+                       backend: str = "xla",
+                       cache: TuningCache | None = None, iters: int = 5,
+                       min_gain: float = MIN_GAIN, seed: int = 0) -> dict:
+    """Tune the ragged-path aggregation kernel over representative
+    knn_build outputs (``scale`` rides inside the cached config so
+    warm-up can replay the exact problem)."""
+    import jax.numpy as jnp
+
+    from repro.kernels import ops
+    rng = np.random.default_rng(seed)
+    dt = _np_dtype(dtype)
+    if batch > 1:
+        f = jnp.asarray(rng.normal(size=(batch, n, d_f)), dt)
+        idx = jnp.asarray(rng.integers(0, n, size=(batch, n, k)), jnp.int32)
+        d2 = jnp.asarray(rng.uniform(0.0, 4.0, size=(batch, n, k)),
+                         jnp.float32)
+
+        def call(cfg):
+            return ops.knn_aggregate_batched(f, idx, d2, scale=scale,
+                                             backend=backend, **cfg)
+    else:
+        f = jnp.asarray(rng.normal(size=(n, d_f)), dt)
+        idx = jnp.asarray(rng.integers(0, n, size=(n, k)), jnp.int32)
+        d2 = jnp.asarray(rng.uniform(0.0, 4.0, size=(n, k)), jnp.float32)
+
+        def call(cfg):
+            return ops.knn_aggregate(f, idx, d2, scale=scale,
+                                     backend=backend, **cfg)
+
+    cands = cand.knn_aggregate_candidates(n, batch=batch)
+    if backend in _KNOB_INERT_BACKENDS:
+        cands = cands[:1]
+    timed = [(cfg, _time_call(lambda c=cfg: call(c), iters=iters))
+             for cfg in cands]
+    key = knn_aggregate_key(n, d_f, k, dtype, backend, batch=batch)
+    best_cfg, best_t, default_t = _pick(timed, min_gain=min_gain)
+    if cache is not None:
+        cache.put(key, {**best_cfg, "scale": scale}, us=best_t * 1e6,
+                  default_us=default_t * 1e6, candidates=len(timed))
+    return best_cfg
+
+
 # -------------------------------------------------------- flash attention ----
 def tune_flash_attention(bh: int, s: int, t: int, d: int, *,
                          causal: bool = True, dtype: str = "float32",
@@ -410,6 +508,28 @@ def autotune_graph(g, *, n_rows: int, backend: str, cache: TuningCache,
                                 dtype=key.dtype, backend=backend,
                                 cache=cache, iters=iters,
                                 min_gain=min_gain)
+        elif key.kernel == "knn_build":
+            shape = key.shape
+            kb = shape[0] if len(shape) == 4 else 1
+            n, d_s, k = shape[-3:]
+            tune_knn_build(n, d_s, k, batch=kb, dtype=key.dtype,
+                           backend=backend, cache=cache, iters=iters,
+                           min_gain=min_gain)
+        elif key.kernel == "knn_aggregate":
+            shape = key.shape
+            kb = shape[0] if len(shape) == 4 else 1
+            n, d_f, k = shape[-3:]
+            scale = 10.0
+            for op in g:
+                if (op.op_type == "knn_aggregate"
+                        and op.attrs.get("d_f") == d_f
+                        and op.attrs.get("k") == k):
+                    scale = op.attrs.get("scale", 10.0)
+                    break
+            tune_knn_aggregate(n, d_f, k, scale=scale, batch=kb,
+                               dtype=key.dtype, backend=backend,
+                               cache=cache, iters=iters,
+                               min_gain=min_gain)
         elif key.kernel == "flash_attention":
             bh, s, t, d = key.shape
             tune_flash_attention(bh, s, t, d, dtype=key.dtype,

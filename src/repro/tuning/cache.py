@@ -124,6 +124,27 @@ def flash_attention_key(bh: int, s: int, t: int, d: int, dtype: str,
     return KernelKey("flash_attention", (bh, s, t, d), dtype, backend)
 
 
+def knn_build_key(n: int, d_s: int, k: int, dtype: str, backend: str,
+                  batch: int = 1) -> KernelKey:
+    """Key for the ragged-path neighbor-selection kernel. ``n`` is the
+    packed bin capacity (= the detector's n_hits), ``batch`` the bin
+    count of the batched launch. Mirrors ``gravnet_key``: 4-dim shape
+    batched, 3-dim per-bin."""
+    if batch > 1:
+        return KernelKey("knn_build", (batch, n, d_s, k), dtype, backend)
+    return KernelKey("knn_build", (n, d_s, k), dtype, backend)
+
+
+def knn_aggregate_key(n: int, d_f: int, k: int, dtype: str, backend: str,
+                      batch: int = 1) -> KernelKey:
+    """Key for the ragged-path aggregation kernel (same shape layout as
+    ``knn_build_key``)."""
+    if batch > 1:
+        return KernelKey("knn_aggregate", (batch, n, d_f, k), dtype,
+                         backend)
+    return KernelKey("knn_aggregate", (n, d_f, k), dtype, backend)
+
+
 @dataclasses.dataclass
 class TuningEntry:
     """One cached winner: the launch config plus search provenance."""

@@ -189,6 +189,35 @@ def edge_aggregate_candidates(n: int, e: int, *, batch: int = 1,
     return _dedup_keep_order(cands)[:max_candidates]
 
 
+def default_knn_build(n: int, batch: int = 1) -> dict:
+    """Heuristic default for the ragged kNN kernels: the gravnet
+    row-tile rule (batch-invariant — the batched form only adds a
+    leading bin grid dimension)."""
+    return {"bm": min(n, 128)}
+
+
+def knn_build_candidates(n: int, *, batch: int = 1,
+                         max_candidates: int = 8) -> list[dict]:
+    cands = [default_knn_build(n, batch)]
+    for bm in _pow2_range(8, 512):
+        if n % bm == 0:        # the kernel asserts n % bm == 0
+            cands.append({"bm": bm})
+    return _dedup_keep_order(cands)[:max_candidates]
+
+
+def default_knn_aggregate(n: int, batch: int = 1) -> dict:
+    return {"bm": min(n, 128)}
+
+
+def knn_aggregate_candidates(n: int, *, batch: int = 1,
+                             max_candidates: int = 8) -> list[dict]:
+    cands = [default_knn_aggregate(n, batch)]
+    for bm in _pow2_range(8, 512):
+        if n % bm == 0:        # the kernel asserts n % bm == 0
+            cands.append({"bm": bm})
+    return _dedup_keep_order(cands)[:max_candidates]
+
+
 def default_flash_attention() -> dict:
     return {"bq": 128, "bk": 128}
 

@@ -158,6 +158,38 @@ def _replay(key, config) -> None:
             mask = jnp.ones((e,), jnp.float32)
             out = ops.edge_aggregate(msgs, ei, n, mask, reduce=reduce,
                                      backend=backend, **cfg)
+    elif key.kernel == "knn_build":
+        if len(key.shape) == 4:   # batched problem: (batch, n, ds, k)
+            batch, n, d_s, k = key.shape
+            s = jnp.asarray(rng.normal(size=(batch, n, d_s)), jnp.float32)
+            seg = jnp.zeros((batch, n), jnp.int32)
+            out = ops.knn_build_batched(s, seg, k=k, backend=backend,
+                                        **config)
+        else:
+            n, d_s, k = key.shape
+            s = jnp.asarray(rng.normal(size=(n, d_s)), jnp.float32)
+            seg = jnp.zeros((n,), jnp.int32)
+            out = ops.knn_build(s, seg, k=k, backend=backend, **config)
+    elif key.kernel == "knn_aggregate":
+        cfg = dict(config)
+        scale = float(cfg.pop("scale", 10.0))
+        if len(key.shape) == 4:   # batched problem: (batch, n, df, k)
+            batch, n, d_f, k = key.shape
+            f = jnp.asarray(rng.normal(size=(batch, n, d_f)), jnp.float32)
+            idx = jnp.asarray(rng.integers(0, n, size=(batch, n, k)),
+                              jnp.int32)
+            d2 = jnp.asarray(rng.uniform(0.0, 4.0, size=(batch, n, k)),
+                             jnp.float32)
+            out = ops.knn_aggregate_batched(f, idx, d2, scale=scale,
+                                            backend=backend, **cfg)
+        else:
+            n, d_f, k = key.shape
+            f = jnp.asarray(rng.normal(size=(n, d_f)), jnp.float32)
+            idx = jnp.asarray(rng.integers(0, n, size=(n, k)), jnp.int32)
+            d2 = jnp.asarray(rng.uniform(0.0, 4.0, size=(n, k)),
+                             jnp.float32)
+            out = ops.knn_aggregate(f, idx, d2, scale=scale,
+                                    backend=backend, **cfg)
     elif key.kernel == "flash_attention":
         bh, s, t, d = key.shape
         q = jnp.asarray(rng.normal(size=(bh, s, d)), jnp.float32)

@@ -1,0 +1,377 @@
+"""Property-test battery for the ragged (padding-free) event path.
+
+Layers covered, bottom up:
+
+- CSR utilities (``data/ragged.py``): pack→unpack round-trip identity
+  for arbitrary occupancy mixes including 0-hit and max-hit events,
+  offset monotonicity/consistency, the shared ``group_by_segment``
+  CSR builder, and bin-packing reversibility;
+- kernel semantics: packed kNN neighbor selection is invariant to the
+  order events arrive in the batch (bin packing preserves within-event
+  row order, so per-event results cannot depend on bin layout);
+- megakernel parity: ``gravnet_block_ragged`` on a packed bin matches
+  the padded ``gravnet_block`` on the same event within the
+  ``_numerics.py`` f32 tolerances, on xla AND pallas_interpret;
+- deployment: ``deploy(ragged=True)`` matches the bucketed deployment
+  end to end on every occupancy profile tested, and the
+  bucket-overflow blind spot is pinned — an event exceeding every
+  bucket cap is *routed* (to the largest bucket, truncated, by
+  contract) while the ragged path serves the same event exactly.
+
+Property tests use hypothesis when installed
+(``tests/_hypothesis_support.py``); seed-sweep versions of the same
+invariants always run.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_support import given, settings, st
+from _numerics import assert_bitwise, assert_close
+
+from repro.data.ragged import (RaggedBatch, bin_pack, bins_needed,
+                               group_by_segment, offsets_from_counts,
+                               pack_events, unpack_binned, unpack_events,
+                               validate_ragged)
+
+jax.config.update("jax_platform_name", "cpu")
+
+_N = 32     # detector hit capacity used throughout
+_D = 4
+
+PARITY_BACKENDS = ("xla", "pallas_interpret")
+
+
+def _ragged_from_counts(counts, d=_D, *, seed=0) -> RaggedBatch:
+    rng = np.random.default_rng(seed)
+    offs = offsets_from_counts(counts)
+    feats = rng.normal(size=(int(offs[-1]), d)).astype(np.float32)
+    return RaggedBatch(feats=feats, offsets=offs)
+
+
+# ------------------------------------------------------------ CSR layer ----
+def _roundtrip(counts, seed):
+    rb = _ragged_from_counts(counts, seed=seed)
+    validate_ragged(rb)
+    offs = np.asarray(rb.offsets)
+    assert offs[0] == 0 and offs[-1] == rb.feats.shape[0]
+    assert (np.diff(offs) >= 0).all()            # monotone
+    np.testing.assert_array_equal(rb.counts(), counts)
+
+    feats, mask = unpack_events(rb, _N)
+    rb2 = pack_events(feats, mask)
+    np.testing.assert_array_equal(rb2.offsets, rb.offsets)
+    np.testing.assert_array_equal(rb2.feats, rb.feats)    # bit-exact
+
+    bp = bin_pack(rb, _N)
+    assert bp.feats.shape[0] == max(bins_needed(counts, _N), 1)
+    # the index planes invert the packing exactly
+    back = unpack_binned(bp.feats, bp.segids, bp.slots, rb.n_events, _N)
+    np.testing.assert_array_equal(back, feats)
+    np.testing.assert_array_equal(
+        unpack_binned(bp.mask[..., None], bp.segids, bp.slots,
+                      rb.n_events, _N)[..., 0], mask)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(0, _N), min_size=1, max_size=10),
+       st.integers(0, 2 ** 16))
+def test_csr_roundtrip_property(counts, seed):
+    """pack→unpack identity + offset invariants for arbitrary
+    occupancy mixes (hypothesis draws include 0-hit and max-hit)."""
+    _roundtrip(counts, seed)
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_csr_roundtrip_seed_sweep(seed):
+    """Always-on version of the round-trip property; the mixes pin the
+    edge cases explicitly: all-empty, max-hit, and a skewed mix."""
+    for counts in ([0], [0, 0, 0], [_N], [_N, 0, _N],
+                   [1, _N, 0, 7, _N // 2, 0]):
+        _roundtrip(counts, seed)
+
+
+def test_offsets_reject_malformed():
+    with pytest.raises(ValueError):
+        offsets_from_counts([-1])
+    with pytest.raises(ValueError):
+        validate_ragged(RaggedBatch(np.zeros((3, 2), np.float32),
+                                    np.asarray([0, 2])))     # offs[-1] != R
+    with pytest.raises(ValueError):
+        validate_ragged(RaggedBatch(np.zeros((3, 2), np.float32),
+                                    np.asarray([0, 2, 1, 3])))  # not monotone
+    with pytest.raises(ValueError):
+        bin_pack(_ragged_from_counts([_N + 1], seed=0), _N)  # event > bin
+
+
+def test_group_by_segment_is_stable():
+    """The shared CSR builder (ragged packer + GraphSAGE sampler):
+    rows group contiguously by segment with relative order preserved."""
+    vals = np.arange(10)
+    segs = np.asarray([2, 0, 1, 0, 2, 1, 0, 2, 1, 0])
+    grouped, offs = group_by_segment(vals, segs, 3)
+    np.testing.assert_array_equal(offs, [0, 4, 7, 10])
+    np.testing.assert_array_equal(grouped, [1, 3, 6, 9, 2, 5, 8, 0, 4, 7])
+    # segments with zero members still get (empty) CSR ranges
+    _, offs = group_by_segment(vals[:2], np.asarray([3, 3]), 5)
+    np.testing.assert_array_equal(offs, [0, 0, 0, 0, 2, 2])
+    with pytest.raises(ValueError):
+        group_by_segment(vals, segs, 2)          # id out of range
+
+
+# -------------------------------------------- kNN permutation invariance ----
+def _per_event_knn(s_events, k):
+    """Reference: each event kNN'd alone (segids all-0)."""
+    from repro.kernels.ref import knn_build_ref
+    out = []
+    for se in s_events:
+        idx, d2 = knn_build_ref(jnp.asarray(se),
+                                jnp.zeros((se.shape[0],), jnp.int32), k=k)
+        out.append((np.asarray(idx), np.asarray(d2)))
+    return out
+
+
+def _packed_knn_by_event(s_events, order, k, *, backend):
+    """Pack events in ``order`` and express each event's kNN result in
+    within-event slot coordinates (layout-independent form)."""
+    from repro.kernels import ops
+    counts = [s_events[e].shape[0] for e in order]
+    rb = RaggedBatch(
+        feats=np.concatenate([s_events[e] for e in order]),
+        offsets=offsets_from_counts(counts))
+    bp = bin_pack(rb, _N)
+    idx, d2 = ops.knn_build_batched(
+        jnp.asarray(bp.feats), jnp.asarray(bp.segids), k=k,
+        backend=backend)
+    idx, d2 = np.asarray(idx), np.asarray(d2)
+    per_event = {}
+    for b in range(bp.segids.shape[0]):
+        for r in range(_N):
+            e = bp.segids[b, r]
+            if e < 0:
+                continue
+            valid = d2[b, r] < 0.5e30
+            # neighbor bin-rows -> within-event slots (same bin always:
+            # selection is segment-masked)
+            nslots = np.where(valid, bp.slots[b, idx[b, r]], -1)
+            per_event.setdefault(int(order[e]), []).append(
+                (int(bp.slots[b, r]), nslots, np.asarray(d2[b, r])))
+    return per_event
+
+
+@pytest.mark.parametrize("backend", PARITY_BACKENDS)
+@pytest.mark.parametrize("perm_seed", [0, 1, 2])
+def test_packed_knn_invariant_to_event_order(backend, perm_seed):
+    """Permuting the events of a batch (hence the whole bin layout)
+    must not change any event's neighbor structure: packed results in
+    within-event slot coordinates equal the event-alone reference."""
+    rng = np.random.default_rng(11)
+    k = 4
+    s_events = [rng.normal(size=(int(c), 3)).astype(np.float32)
+                for c in (7, _N, 12, 5, 20)]
+    ref = _per_event_knn(s_events, k)
+    order = np.random.default_rng(perm_seed).permutation(len(s_events))
+    got = _packed_knn_by_event(s_events, order, k, backend=backend)
+    for e, rows in got.items():
+        ridx, rd2 = ref[e]
+        for slot, nslots, d2row in rows:
+            valid = rd2[slot] < 0.5e30
+            np.testing.assert_array_equal(
+                nslots[valid], ridx[slot][valid],
+                err_msg=f"{backend}/event{e}/slot{slot}")
+            assert_bitwise(d2row, rd2[slot],
+                           context=f"{backend}/event{e}/slot{slot}/d2")
+
+
+# --------------------------------------------------- megakernel parity ----
+@pytest.mark.parametrize("backend", PARITY_BACKENDS)
+@pytest.mark.parametrize("occ", [3, 17, _N])
+def test_ragged_block_matches_padded_block(backend, occ):
+    """gravnet_block_ragged on a packed bin == padded gravnet_block on
+    the same event, within the f32 dtype table, on xla AND
+    pallas_interpret — the kernel-level ragged-vs-padded contract."""
+    from repro.kernels import ops
+    rng = np.random.default_rng(5)
+    dh, ds, df, dout, k = 24, 3, 10, 24, 6
+    x = rng.normal(size=(occ, dh)).astype(np.float32)
+    ws = (rng.normal(size=(dh, ds)) * 0.3).astype(np.float32)
+    bs = rng.normal(size=(ds,)).astype(np.float32) * 0.1
+    wf = (rng.normal(size=(dh, df)) * 0.3).astype(np.float32)
+    bf = rng.normal(size=(df,)).astype(np.float32) * 0.1
+    wo = (rng.normal(size=(dh + 2 * df, dout)) * 0.3).astype(np.float32)
+    bo = rng.normal(size=(dout,)).astype(np.float32) * 0.1
+
+    xp = np.zeros((_N, dh), np.float32)
+    xp[:occ] = x
+    maskp = np.zeros((_N,), np.float32)
+    maskp[:occ] = 1.0
+    want = ops.gravnet_block(jnp.asarray(xp), jnp.asarray(maskp),
+                             ws, bs, wf, bf, wo, bo, k=k,
+                             backend=backend)
+
+    seg = np.full((1, _N), -1, np.int32)
+    seg[0, :occ] = 0
+    got = ops.gravnet_block_ragged(jnp.asarray(xp[None]),
+                                   jnp.asarray(seg), ws, bs, wf, bf,
+                                   wo, bo, k=k, backend=backend)
+    assert_close(got[0, :occ], np.asarray(want)[:occ], dtype="float32",
+                 context=f"{backend}/occ={occ}")
+    # padding rows are zeroed, not garbage
+    np.testing.assert_array_equal(np.asarray(got[0, occ:]), 0.0)
+
+
+# -------------------------------------------------- deployed end to end ----
+def _deploys():
+    import repro.core.caloclusternet as ccn
+    from repro.core.pipeline import Requirements, deploy, deploy_bucketed
+    cfg = ccn.current_detector_config()
+    params = ccn.init(jax.random.PRNGKey(1), cfg)
+    g = ccn.to_graph(params, cfg)
+    req = Requirements(design_point=3, platform="cpu",
+                       precision_policy="fp", n_hits=cfg.n_hits,
+                       target_throughput=5e4, max_latency_s=2e-3)
+    return cfg, g, req, deploy, deploy_bucketed
+
+
+def _profile_feeds(cfg, occupancies, *, batch=8, seed=3):
+    from repro.data.belle2 import current_detector, generate, with_occupancy
+    gen = with_occupancy(current_detector(), occupancies)
+    data = generate(gen, batch, seed=seed)
+    return {"hits": data["feats"], "mask": data["mask"]}
+
+
+@pytest.mark.parametrize("occupancies", [(4, 8), (9, 17, 25), (32,)])
+def test_deployed_ragged_matches_bucketed(occupancies):
+    """deploy(ragged=True) == deploy_bucketed within the numerics
+    tables for every occupancy profile tested: per-event valid head
+    rows and the condensation outputs agree."""
+    cfg, g, req, deploy, deploy_bucketed = _deploys()
+    feeds = _profile_feeds(cfg, occupancies)
+    bucketed = deploy_bucketed(g, req, buckets=(8, 16, 32), microbatch=4)
+    ragged = deploy(g, req, batch=4, ragged=True)
+    want = bucketed(feeds)
+    got = ragged(feeds)
+    counts = np.asarray(feeds["mask"]).sum(axis=1).astype(int)
+    for h in ("beta", "coords", "energy", "cls"):
+        wh, gh = np.asarray(want[h]), np.asarray(got[h])
+        for e, c in enumerate(counts):
+            assert_close(gh[e, :c], wh[e, :c], dtype="float32",
+                         context=f"{occupancies}/{h}/event{e}")
+    for name in want["cps"]:
+        assert_close(np.asarray(got["cps"][name], np.float32),
+                     np.asarray(want["cps"][name], np.float32),
+                     dtype="float32", context=f"cps/{name}")
+
+
+def test_deployed_ragged_matches_padded_on_interpret():
+    """One end-to-end parity run through the Pallas kernel bodies
+    (interpret mode): ragged vs the single full-width padded
+    executable."""
+    cfg, g, req, deploy, _ = _deploys()
+    feeds = _profile_feeds(cfg, (9, 17, 25), batch=4)
+    padded = deploy(g, req, batch=4,
+                    kernel_backend="pallas_interpret")(feeds)
+    got = deploy(g, req, batch=4, ragged=True,
+                 kernel_backend="pallas_interpret")(feeds)
+    counts = np.asarray(feeds["mask"]).sum(axis=1).astype(int)
+    for h in ("beta", "coords", "energy", "cls"):
+        for e, c in enumerate(counts):
+            assert_close(np.asarray(got[h])[e, :c],
+                         np.asarray(padded[h])[e, :c], dtype="float32",
+                         context=f"{h}/event{e}")
+
+
+def test_bucket_overflow_routed_not_dropped_and_ragged_exact():
+    """The bucket-overflow blind spot, pinned: an event exceeding
+    every bucket cap is *routed* to the largest bucket (and truncated
+    there — the documented fallback), while the ragged path serves the
+    identical event exactly (it matches the full-width padded
+    pipeline on every hit)."""
+    from repro.serving.router import pick_bucket
+    buckets = (8, 16, 24)
+    assert pick_bucket(30, buckets) == 24        # routed, never an error
+    assert pick_bucket(0, buckets) == 8
+    assert pick_bucket(24, buckets) == 24
+
+    cfg, g, req, deploy, deploy_bucketed = _deploys()
+    rng = np.random.default_rng(9)
+    occ = 30                                      # > every bucket cap
+    feeds = {"hits": rng.normal(size=(2, cfg.n_hits, cfg.d_in)
+                                ).astype(np.float32),
+             "mask": np.zeros((2, cfg.n_hits), np.float32)}
+    feeds["mask"][:, :occ] = 1.0
+
+    bucketed = deploy_bucketed(g, req, buckets=buckets, microbatch=2)
+    assert bucketed.classify(occ) == 24
+    wb = bucketed(feeds)                          # served, not dropped
+    assert np.asarray(wb["beta"]).shape[1] == 24  # truncation contract
+
+    padded = deploy(g, req, batch=2)(feeds)
+    got = deploy(g, req, batch=2, ragged=True)(feeds)
+    for h in ("beta", "coords", "energy", "cls"):
+        for e in range(2):
+            assert_close(np.asarray(got[h])[e, :occ],
+                         np.asarray(padded[h])[e, :occ],
+                         dtype="float32", context=f"{h}/event{e}")
+    for name in padded["cps"]:
+        assert_close(np.asarray(got["cps"][name], np.float32),
+                     np.asarray(padded["cps"][name], np.float32),
+                     dtype="float32", context=f"cps/{name}")
+
+
+def test_launch_splitting_never_truncates():
+    """More events than one launch holds: the plan splits into several
+    launches and every event still comes back (max_events caps a
+    launch, not the submission)."""
+    cfg, g, req, deploy, _ = _deploys()
+    ragged = deploy(g, req, batch=2, ragged=True, max_events=3)
+    rng = np.random.default_rng(2)
+    b = 11                                        # forces >= 4 launches
+    feeds = {"hits": rng.normal(size=(b, cfg.n_hits, cfg.d_in)
+                                ).astype(np.float32),
+             "mask": (rng.uniform(size=(b, cfg.n_hits)) < 0.5
+                      ).astype(np.float32)}
+    plan = ragged._plan_launches(
+        np.asarray(feeds["mask"]).sum(axis=1).astype(int))
+    assert len(plan) >= 4
+    assert plan[0][0] == 0 and plan[-1][1] == b
+    assert all(a == c for (_, a), (c, _) in zip(plan, plan[1:]))
+    out = ragged(feeds)
+    assert np.asarray(out["beta"]).shape[0] == b
+    want = deploy(g, req, batch=2)(feeds)
+    mask = np.asarray(feeds["mask"]) > 0
+    counts = mask.sum(axis=1).astype(int)
+    # the ragged path compacts each event's valid hits, the padded one
+    # keeps original positions — compare valid rows in order
+    for e, c in enumerate(counts):
+        assert_close(np.asarray(out["beta"])[e, :c],
+                     np.asarray(want["beta"])[e][mask[e]], dtype="float32",
+                     context=f"event{e}")
+
+
+def test_raggedize_refuses_batchnorm():
+    from repro.core.graph_ir import Graph, Operator
+    from repro.core.op_registry import GraphVerificationError
+    from repro.core.passes.ragged import raggedize
+    g = Graph()
+    g.add(Operator(name="x", op_type="input", out_dim=4,
+                   attrs={"feature": "x"}))
+    g.add(Operator(name="bn", op_type="batchnorm", inputs=["x"],
+                   out_dim=4,
+                   params={"scale": np.ones(4, np.float32),
+                           "bias": np.zeros(4, np.float32),
+                           "mean": np.zeros(4, np.float32),
+                           "var": np.ones(4, np.float32)}))
+    with pytest.raises(GraphVerificationError):
+        raggedize(g)
+
+
+def test_ragged_requires_fp_policy():
+    cfg, g, req, deploy, _ = _deploys()
+    req = dataclasses.replace(req, precision_policy="mixed")
+    with pytest.raises(NotImplementedError):
+        deploy(g, req, ragged=True)

@@ -85,6 +85,16 @@ def _fusion_rows(d: list) -> list[tuple[str, object]]:
     return [("worst fused-block speedup (mb ≥ 8)", f"{worst:.2f}×")]
 
 
+def _ragged_rows(d: dict) -> list[tuple[str, object]]:
+    return [
+        ("bucketed / ragged (ev/s)",
+         f"{d['bucketed_ev_s']:,.0f} / {d['ragged_ev_s']:,.0f}"),
+        ("ragged speedup (gate ≥ %.2f×)" % d["min_speedup"],
+         f"{d['speedup']:.2f}×"),
+        ("ragged gate", bool(d["speedup"] >= d["min_speedup"])),
+    ]
+
+
 def _monitoring_rows(d: dict) -> list[tuple[str, object]]:
     return [("monitoring hot-path overhead",
              f"{100 * d['overhead_frac']:.2f}%")]
@@ -105,6 +115,7 @@ def _multimodel_rows(d: dict) -> list[tuple[str, object]]:
 _HEADLINES = {
     "BENCH_latency.json": _latency_rows,
     "BENCH_batching.json": _batching_rows,
+    "BENCH_ragged.json": _ragged_rows,
     "BENCH_fusion.json": _fusion_rows,
     "BENCH_monitoring.json": _monitoring_rows,
     "BENCH_multimodel.json": _multimodel_rows,
