@@ -13,6 +13,9 @@ Prints ``name,us_per_call,derived`` CSV rows.
                 dense→aggregate→dense chain (launch-count fusion)
   latency     — open-loop p50/p95/p99 serving latency, streaming vs
                 deadline replica loop, with the p99 SLO gate enforced
+  faults      — fault-injection degradation curve (throughput + p99 vs
+                fault rate, plus one dead replica of four) with the
+                chaos gates enforced (exactly-once, >=0.6x floor)
 
 A failing section is still reported as a ``name,nan,ERROR ...`` row (so
 one broken figure never hides the others), but the run exits nonzero —
@@ -67,13 +70,16 @@ _SCORES = {
     # p99 speedup of the streaming loop over the deadline loop
     "latency": lambda r: (r["loops"]["deadline"]["p99_us"]
                           / r["loops"]["streaming"]["p99_us"]),
+    # one-dead-replica ok-throughput as a fraction of healthy
+    "faults": lambda r: r["degradation"]["ratio"],
 }
 
 
 def main(argv: list[str] | None = None) -> int:
     from benchmarks import (batching, design_points, fusion, kernels_bench,
                             parallelization_sweep, resource_table,
-                            roofline, serving_latency, tuning_bench)
+                            roofline, serving_faults, serving_latency,
+                            tuning_bench)
     argv = sys.argv[1:] if argv is None else argv
     print("name,us_per_call,derived")
     only = argv[0] if argv else None
@@ -91,6 +97,10 @@ def main(argv: list[str] | None = None) -> int:
         # failed and the run exits nonzero
         "latency": lambda: serving_latency.run(
             os.path.join(_REPO, "BENCH_latency.json"), check=True),
+        # check=True: a chaos-gate miss (exactly-once violation or a
+        # degradation floor breach) raises, failing the run
+        "faults": lambda: serving_faults.run(
+            os.path.join(_REPO, "BENCH_faults.json"), check=True),
     }
     if only is not None and only not in sections:
         print(f"unknown section {only!r}; have: {', '.join(sections)}",

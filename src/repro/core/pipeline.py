@@ -769,8 +769,8 @@ class BucketedPipeline:
 
     # ------------------------------------------------------- classification --
     def classify(self, occupancy: int) -> int:
-        from repro.serving.router import pick_bucket
-        return pick_bucket(occupancy, self.buckets)
+        from repro.serving.router import pick_bucket_sorted
+        return pick_bucket_sorted(occupancy, self.buckets)
 
     def _occupancies(self, feeds):
         import numpy as np

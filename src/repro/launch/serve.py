@@ -43,8 +43,9 @@ import numpy as np
 from repro.core.graph_ir import export_graph
 from repro.core.passes.parallelize import Requirements
 from repro.core.pipeline import deploy, deploy_bucketed
-from repro.serving import (MonitorServer, ShardedTriggerService,
-                           event_display, write_display)
+from repro.serving import (FaultPlan, MonitorServer,
+                           ShardedTriggerService, event_display,
+                           write_display)
 
 
 # ------------------------------------------------------------ model zoo ----
@@ -160,6 +161,30 @@ def _tune_and_rebind(cache, args, problems, redeploy):
     return redeploy() if n_new else None   # rebind fresh winners
 
 
+def _fault_kwargs(args) -> dict:
+    """Fault-tolerance service kwargs from the CLI: a seeded fault
+    plan (--inject-faults implies the breaker — injecting chaos
+    without health tracking just loses events), circuit breaking,
+    bounded failover, and load shedding."""
+    faults = FaultPlan.parse(args.inject_faults, seed=args.fault_seed) \
+        if args.inject_faults else None
+    if faults is not None:
+        print(f"[serve] chaos plan: {faults.describe()}")
+    return {"faults": faults,
+            "breaker": args.breaker or faults is not None,
+            "max_retries": args.max_retries,
+            "shed": args.shed}
+
+
+def _print_chaos(eng, failed: int):
+    ft = eng.fault_tolerance_summary()
+    br = ft["breaker"]
+    print(f"[serve] chaos: {failed} client-visible failure(s), "
+          f"shed={ft['shed']} retried={ft['retried']} "
+          f"failed_over={ft['failed_over']} "
+          f"breaker open={br['open']} half_open={br['half_open']}")
+
+
 def _serve_multimodel(args):
     """Heterogeneous-model serving: one route (replica group) per
     requested model behind a single global in-order release stage."""
@@ -170,10 +195,11 @@ def _serve_multimodel(args):
         s.pipe({k: np.stack([e[k] for e in warm]) for k in warm[0]})
     print(f"[serve] deployed design ③{args.design_point} routes="
           f"{[s.name for s in servables]} microbatch={mb}")
+    fk = _fault_kwargs(args)
     eng = ShardedTriggerService(
         routes={s.name: s.pipe for s in servables},
         n_replicas=args.replicas, microbatch=mb, window_s=2e-3,
-        policy=args.policy, loop=args.loop)
+        policy=args.policy, loop=args.loop, **fk)
     per = {s.name: s.events(args.events // len(servables) +
                             (i < args.events % len(servables)),
                             seed=7 + i)
@@ -189,10 +215,15 @@ def _serve_multimodel(args):
                 live.remove(name)
             else:
                 futs.append(eng.submit(ev, route=name))
-    results = [f.result(timeout=120) for f in futs]
+    results, failed = [], 0
+    for f in futs:
+        try:
+            results.append(f.result(timeout=120))
+        except Exception:  # noqa: BLE001 — only under injected chaos
+            failed += 1
     dt = time.perf_counter() - t0
     eng.drain()
-    released = len(results)
+    released = len(results) + failed
     s = eng.stats.summary()
     print(f"[serve] {released} events in {dt:.2f}s -> "
           f"{released / dt:,.0f} ev/s (CPU, {args.replicas} replica(s) "
@@ -204,6 +235,8 @@ def _serve_multimodel(args):
         print(f"[serve]   route {row['route']}: "
               f"{row['submitted']} submitted, {row['completed']} "
               f"completed, {row['batches']} batches")
+    if fk["faults"] is not None:
+        _print_chaos(eng, failed)
     eng.close()
     if args.bench_out:
         bench = {
@@ -218,7 +251,10 @@ def _serve_multimodel(args):
         with open(args.bench_out, "w") as f:
             json.dump(bench, f, indent=2)
         print(f"[serve] multi-model stats -> {args.bench_out}")
-    if released < args.events or any(
+    if released < args.events:
+        raise SystemExit("multi-model serving released fewer events "
+                         "than were submitted")
+    if fk["faults"] is None and any(
             row["completed"] != row["submitted"] for row in route_rows):
         raise SystemExit("multi-model serving released fewer events "
                          "than were submitted")
@@ -273,6 +309,25 @@ def main():
                          "deadline loop exactly")
     ap.add_argument("--policy", default="round_robin",
                     choices=["round_robin", "least_loaded"])
+    ap.add_argument("--inject-faults", default=None, metavar="SPEC",
+                    help="deterministic chaos: seeded fault plan, e.g. "
+                         "'fail:p=0.05;stall:p=0.02,s=0.01' or "
+                         "'fail:p=1.0,replica=1' (dead lane); grammar "
+                         "in docs/serving.md. Implies --breaker")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="seed for --inject-faults (bit-identical "
+                         "replay)")
+    ap.add_argument("--breaker", action="store_true",
+                    help="per-replica health tracking + circuit "
+                         "breaking (closed/open/half-open)")
+    ap.add_argument("--max-retries", type=int, default=0, metavar="N",
+                    help="failover: re-dispatch a failed batch's "
+                         "events to a healthy sibling up to N times "
+                         "before failing to the client")
+    ap.add_argument("--shed", action="store_true",
+                    help="load shedding: a full replica queue fails "
+                         "the event fast with ShedError instead of "
+                         "blocking submit()")
     ap.add_argument("--buckets", type=int, nargs="+", default=None,
                     metavar="N_HITS",
                     help="occupancy buckets (e.g. 8 16 32): deploy one "
@@ -370,6 +425,7 @@ def main():
         if monitoring else False
     fuse_block = not args.no_fuse_gravnet_block
     fuse_int8 = not args.no_fuse_int8
+    fk = _fault_kwargs(args)
     if args.buckets:
         mb = args.bucket_microbatch
         bpipe = deploy_bucketed(graph, req, buckets=args.buckets,
@@ -394,7 +450,7 @@ def main():
         eng = ShardedTriggerService(
             buckets=bpipe, n_replicas=args.replicas, microbatch=mb,
             window_s=2e-3, hedge_after_s=None, policy=args.policy,
-            monitor=monitor_cfg, loop=args.loop)
+            monitor=monitor_cfg, loop=args.loop, **fk)
         print(f"[serve] bucket executables pre-compiled at startup: "
               f"{sum(r.warmed for r in eng.replicas)}")
     else:
@@ -429,7 +485,7 @@ def main():
             infer, n_replicas=args.replicas,
             microbatch=max(pipe.microbatch, 16), window_s=2e-3,
             hedge_after_s=None, policy=args.policy, warmup_fn=warmup_fn,
-            monitor=monitor_cfg, loop=args.loop)
+            monitor=monitor_cfg, loop=args.loop, **fk)
         if warmup_fn is not None:
             print(f"[serve] replicas warmed "
                   f"{sum(r.warmed for r in eng.replicas)} cached kernel "
@@ -448,11 +504,18 @@ def main():
                                 "mask": events["mask"][i]},
                                truth=bool(truth[i]) if monitoring
                                else None))
-    results = [f.result(timeout=120) for f in futs]
+    results, failed = [], 0
+    for f in futs:
+        try:
+            results.append(f.result(timeout=120))
+        except Exception:  # noqa: BLE001 — only under injected chaos
+            results.append(None)
+            failed += 1
     dt = time.perf_counter() - t0
     eng.drain()
     s = eng.stats.summary()
-    trig = np.asarray([bool(r["cps"]["trigger"]) for r in results])
+    trig = np.asarray([bool(r["cps"]["trigger"]) if r is not None
+                       else False for r in results])
     eff = float((trig & truth).sum() / max(truth.sum(), 1))
     fake = float((trig & ~truth).sum() / max((~truth).sum(), 1))
     print(f"[serve] {args.events} events in {dt:.2f}s -> "
@@ -476,6 +539,8 @@ def main():
                   f"{bs['padded_events']} padded")
     print(f"[serve] trigger efficiency={eff:.3f} fake rate={fake:.3f} "
           f"in-order=True")
+    if fk["faults"] is not None:
+        _print_chaos(eng, failed)
     if monitoring:
         snap = eng.monitor_snapshot()
 
@@ -501,7 +566,8 @@ def main():
     if args.event_display:
         disp = [event_display(r["cps"], event_id=i, detector=gen_cfg,
                               truth=bool(truth[i]))
-                for i, r in enumerate(results[:args.event_display_n])]
+                for i, r in enumerate(results[:args.event_display_n])
+                if r is not None]
         write_display(args.event_display, disp)
         print(f"[serve] event display ({len(disp)} events) -> "
               f"{args.event_display}")

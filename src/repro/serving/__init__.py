@@ -1,18 +1,26 @@
 from repro.serving.engine import (AggregateStats, ServingStats,
                                   ShardedTriggerService,
                                   TriggerServingEngine)
+from repro.serving.faults import (FAULT_KINDS, FaultPlan, FaultSpec,
+                                  InjectedFault)
+from repro.serving.health import (BREAKER_STATES, BreakerConfig,
+                                  ReplicaHealth)
 from repro.serving.monitor import (MonitorSnapshot, TriggerMonitor,
                                    detector_grid, event_display,
                                    write_display)
 from repro.serving.monitor_server import MonitorServer
-from repro.serving.replica import InOrderReleaser, ReplicaEngine
+from repro.serving.replica import (InOrderReleaser, ReplicaEngine,
+                                   ShedError)
 from repro.serving.router import (POLICIES, Router, event_occupancy,
-                                  pick_bucket)
+                                  pick_bucket, pick_bucket_sorted)
 from repro.serving.streaming import LOOPS, StreamingReplicaEngine
 
-__all__ = ["AggregateStats", "InOrderReleaser", "LOOPS", "MonitorServer",
-           "MonitorSnapshot", "POLICIES", "ReplicaEngine", "Router",
-           "ServingStats", "ShardedTriggerService",
+__all__ = ["AggregateStats", "BREAKER_STATES", "BreakerConfig",
+           "FAULT_KINDS", "FaultPlan", "FaultSpec", "InOrderReleaser",
+           "InjectedFault", "LOOPS", "MonitorServer", "MonitorSnapshot",
+           "POLICIES", "ReplicaEngine", "ReplicaHealth", "Router",
+           "ServingStats", "ShardedTriggerService", "ShedError",
            "StreamingReplicaEngine", "TriggerMonitor",
            "TriggerServingEngine", "detector_grid", "event_display",
-           "event_occupancy", "pick_bucket", "write_display"]
+           "event_occupancy", "pick_bucket", "pick_bucket_sorted",
+           "write_display"]

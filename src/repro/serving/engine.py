@@ -33,15 +33,17 @@ from concurrent.futures import Future
 
 import numpy as np
 
+from repro.serving.health import BreakerConfig, ReplicaHealth
 from repro.serving.monitor import MonitorSnapshot, TriggerMonitor
 from repro.serving.replica import (EventTiming, InOrderReleaser,
-                                   ReplicaEngine, ServingStats)
+                                   ReplicaEngine, ServingStats,
+                                   ShedError)
 from repro.serving.router import (POLICIES, Router, event_occupancy,
-                                  pick_bucket)
+                                  pick_bucket_sorted)
 from repro.serving.streaming import LOOPS, StreamingReplicaEngine
 
 __all__ = ["AggregateStats", "ServingStats", "ShardedTriggerService",
-           "TriggerServingEngine", "POLICIES", "LOOPS"]
+           "ShedError", "TriggerServingEngine", "POLICIES", "LOOPS"]
 
 
 class AggregateStats:
@@ -115,6 +117,9 @@ class AggregateStats:
             "batches": self.batches,
             "hedged": self.hedged,
             "padded_events": self.padded_events,
+            "shed": self._sum("shed"),
+            "retried": self._sum("retried"),
+            "failed_over": self._sum("failed_over"),
             "p50_us": float(np.percentile(lat, 50)) * 1e6
             if lat.size else None,
             "p99_us": float(np.percentile(lat, 99)) * 1e6
@@ -220,13 +225,36 @@ class ShardedTriggerService:
                  policy: str = "round_robin", devices="auto",
                  inflight: int = 2, warmup_fn=None, monitor=False,
                  buckets=None, mask_feed: str = "mask",
-                 routes=None, ragged=None, loop: str = "deadline"):
+                 routes=None, ragged=None, loop: str = "deadline",
+                 faults=None, breaker=None, max_retries: int = 0,
+                 shed: bool = False):
         if n_replicas < 1:
             raise ValueError("n_replicas must be >= 1")
         if loop not in LOOPS:
             raise ValueError(f"unknown replica loop {loop!r}; expected "
                              f"one of {LOOPS}")
+        if max_retries < 0:
+            raise ValueError("max_retries must be >= 0")
         self.loop = loop
+        # fault tolerance (docs/serving.md): a seeded FaultPlan to
+        # inject deterministic chaos, a circuit-breaker config (True
+        # for defaults), bounded failover re-dispatch, and fast-fail
+        # load shedding.  All default off — healthy-path behavior is
+        # bit-identical without them.
+        self.faults = faults
+        if breaker is None or breaker is False:
+            self.breaker = None
+        elif breaker is True:
+            self.breaker = BreakerConfig()
+        elif isinstance(breaker, BreakerConfig):
+            self.breaker = breaker
+        else:
+            raise TypeError("breaker= expects True/False/None or a "
+                            "health.BreakerConfig")
+        self.max_retries = int(max_retries)
+        self.shed = bool(shed)
+        self._retry_counts: dict[int, int] = {}
+        self._retry_lock = threading.Lock()
         engine_cls = StreamingReplicaEngine if loop == "streaming" \
             else ReplicaEngine
         self.mask_feed = mask_feed
@@ -333,6 +361,12 @@ class ShardedTriggerService:
                           for r in self.routes for _ in range(n_replicas)]
         else:
             warmup_fns = [warmup_fn] * total
+        # per-replica health drives the breaker-aware router and the
+        # failover target choice; None when the breaker is disabled.
+        self.healths = {i: ReplicaHealth(i, self.breaker)
+                        for i in range(total)} if self.breaker else None
+        on_batch_failure = self._handle_batch_failure \
+            if self.max_retries > 0 else None
         self.replicas = []
         warmed = set()   # (device, warmup identity): jit caches are
         #                  per-device, and bucket groups warm per-bucket
@@ -349,29 +383,48 @@ class ShardedTriggerService:
                            monitor=self.monitors[i]
                            if self.monitors else None,
                            truth_map=self._truth
-                           if self.monitors else None))
+                           if self.monitors else None,
+                           faults=faults,
+                           health=self.healths[i]
+                           if self.healths else None,
+                           on_batch_failure=on_batch_failure,
+                           shed=shed))
         if self.buckets:
             self._bucket_groups = {
                 b: self.replicas[gi * n_replicas:(gi + 1) * n_replicas]
                 for gi, b in enumerate(self.buckets)}
             self._bucket_routers = {
-                b: Router(grp, policy)
+                b: Router(grp, policy, healths=self.healths)
                 for b, grp in self._bucket_groups.items()}
             # per-bucket intake counters double as gap-free round-robin
             # indices within each bucket's replica group.
             self.bucket_counts = {b: 0 for b in self.buckets}
             self.router = None
+            groups = self._bucket_groups.items()
+            labels = {b: f"bucket {b}" for b in self.buckets}
         elif self.routes:
             self._route_groups = {
                 r: self.replicas[gi * n_replicas:(gi + 1) * n_replicas]
                 for gi, r in enumerate(self.routes)}
             self._route_routers = {
-                r: Router(grp, policy)
+                r: Router(grp, policy, healths=self.healths)
                 for r, grp in self._route_groups.items()}
             self.route_counts = {r: 0 for r in self.routes}
             self.router = None
+            groups = self._route_groups.items()
+            labels = {r: f"route {r}" for r in self.routes}
         else:
-            self.router = Router(self.replicas, policy)
+            self.router = Router(self.replicas, policy,
+                                 healths=self.healths)
+            groups = [(None, self.replicas)]
+            labels = {None: ""}
+        # replica_id -> (its failover group, human label) — failover
+        # stays within the group (same executable/launch shape), and
+        # drain() names the group when a lane wedges.
+        self._group_of = {r.replica_id: grp
+                          for g, grp in groups for r in grp}
+        self._label_of = {r.replica_id: labels[g]
+                          for g, grp in groups for r in grp}
         self._agg = AggregateStats(self.replicas)
 
     # ------------------------------------------------------------ client ----
@@ -393,11 +446,13 @@ class ShardedTriggerService:
         """The occupancy bucket this event would dispatch to."""
         if not self.buckets:
             raise RuntimeError("service is not occupancy-bucketed")
-        return pick_bucket(event_occupancy(event, self.mask_feed),
-                           self.buckets)
+        # self.buckets is a sorted tuple -> allocation-free lookup
+        return pick_bucket_sorted(
+            event_occupancy(event, self.mask_feed), self.buckets)
 
     def submit(self, event: dict, *, truth: bool | None = None,
-               route: str | None = None) -> Future:
+               route: str | None = None,
+               deadline_s: float | None = None) -> Future:
         """Shard the event to a replica; returns a Future that resolves
         in global submission order.  Blocks (backpressure) when the
         chosen replica's bounded queue is full.
@@ -413,7 +468,13 @@ class ShardedTriggerService:
 
         ``truth``: optional ground-truth trigger bit; with monitoring
         enabled it is matched against the model's decision on release,
-        feeding the snapshot's online efficiency / fake-rate."""
+        feeding the snapshot's online efficiency / fake-rate.
+
+        ``deadline_s``: optional per-event latency budget measured
+        from this submit; an event still undispatched when it expires
+        is shed (``ShedError``) instead of served late.  Combine with
+        the service-level ``shed=True`` to also fail fast on a full
+        lane queue."""
         t_submit = time.perf_counter()
         bucket = None
         if self.routes:
@@ -429,9 +490,10 @@ class ShardedTriggerService:
         elif route is not None:
             raise ValueError("service has no routes= configured")
         if self.buckets:
-            # classify outside the sequence lock (O(hits) numpy count)
-            bucket = pick_bucket(event_occupancy(event, self.mask_feed),
-                                 self.buckets)
+            # classify outside the sequence lock (O(hits) numpy count;
+            # self.buckets is pre-sorted, the lookup allocates nothing)
+            bucket = pick_bucket_sorted(
+                event_occupancy(event, self.mask_feed), self.buckets)
             event = self._cut_event(event, bucket)
         elif self.ragged:
             # normalize every submission to the full hit capacity so
@@ -458,14 +520,22 @@ class ShardedTriggerService:
             self._truth[seq] = bool(truth)   # before enqueue: release
             #                      can only happen after the enqueue.
         fut: Future = Future()
+        if deadline_s is not None:
+            # stamped on the future (always the item tuple's last
+            # element) so neither loop's item shapes change
+            fut.deadline = t_submit + deadline_s
         replica.enqueue(seq, t_submit, event, fut)
         return fut
 
     # ----------------------------------------------------------- release ----
-    def _on_release(self, outcome, timing: EventTiming, fut: Future):
+    def _on_release(self, seq: int, outcome, timing: EventTiming,
+                    fut: Future):
         # monitoring does NOT happen here: the replica batch loop has
         # already record_raw()ed this event, so the serialized release
         # stage stays monitoring-free.
+        if self.max_retries:
+            with self._retry_lock:
+                self._retry_counts.pop(seq, None)
         st = self.replicas[timing.replica_id].stats
         kind, value = outcome
         if kind == "ok":
@@ -476,6 +546,48 @@ class ShardedTriggerService:
             st.failed += 1
             if not fut.cancelled():
                 fut.set_exception(value)
+
+    # ---------------------------------------------------------- failover ----
+    def _failover_target(self, source):
+        """A healthy sibling in the failing replica's group, or None
+        when the batch must fail to the client."""
+        group = self._group_of[source.replica_id]
+        cands = [r for r in group if r is not source and not r.stopping]
+        if not cands:
+            return None
+        if self.healths is not None:
+            cands = [r for r in cands
+                     if self.healths[r.replica_id].available()]
+            if not cands:
+                return None
+            return min(cands, key=lambda r: (
+                r.load(), self.healths[r.replica_id].score(),
+                r.replica_id))
+        return min(cands, key=lambda r: (r.load(), r.replica_id))
+
+    def _handle_batch_failure(self, replica, items, exc):
+        """Failover hook (runs on the failing replica's dispatch or
+        harvest thread): re-dispatch each event of a failed batch to a
+        healthy sibling, bounded by ``max_retries`` per event; returns
+        the items that could not be moved — the replica releases those
+        as errors, so every event still resolves exactly once."""
+        remaining = []
+        for it in items:
+            try:
+                seq, t_submit, event, fut = it[0], it[1], it[-2], it[-1]
+                with self._retry_lock:
+                    n = self._retry_counts.get(seq, 0)
+                    if n >= self.max_retries:
+                        remaining.append(it)
+                        continue
+                    self._retry_counts[seq] = n + 1
+                target = self._failover_target(replica)
+                if target is None or not target.requeue(
+                        seq, t_submit, event, fut):
+                    remaining.append(it)
+            except Exception:  # noqa: BLE001 — failover is best-effort;
+                remaining.append(it)   # the event fails to the client
+        return remaining
 
     # -------------------------------------------------------- monitoring ----
     @property
@@ -489,7 +601,32 @@ class ShardedTriggerService:
             raise RuntimeError(
                 "monitoring is off; construct the service with "
                 "monitor=True")
-        return MonitorSnapshot.merge(self.monitors)
+        snap = MonitorSnapshot.merge(self.monitors)
+        # fault-path counters ride along so the /snapshot HTTP payload
+        # (monitor_server.py) exposes shed/retry/breaker state too
+        snap["serving"] = self.fault_tolerance_summary()
+        return snap
+
+    def fault_tolerance_summary(self) -> dict:
+        """Shed / retried / failed-over counters plus per-replica
+        breaker state — the fault-path view (also embedded in
+        ``monitor_snapshot()`` under ``"serving"``)."""
+        states = {str(i): h.state()
+                  for i, h in (self.healths or {}).items()}
+        return {
+            "shed": sum(r.stats.shed for r in self.replicas),
+            "retried": sum(r.stats.retried for r in self.replicas),
+            "failed_over": sum(r.stats.failed_over
+                               for r in self.replicas),
+            "max_retries": self.max_retries,
+            "breaker": {
+                "enabled": self.healths is not None,
+                "open": sum(1 for s in states.values() if s == "open"),
+                "half_open": sum(1 for s in states.values()
+                                 if s == "half_open"),
+                "states": states,
+            },
+        }
 
     def event_displays(self, n: int | None = None) -> list[dict]:
         """Most recent event-display records across all replicas, in
@@ -541,8 +678,29 @@ class ShardedTriggerService:
                or self._releaser.pending
                or self._releaser.released < self._seq):
             if time.perf_counter() - t0 > timeout:
-                raise TimeoutError("serving service drain timeout")
+                raise TimeoutError("serving service drain timeout: "
+                                   + self._drain_report())
             time.sleep(1e-3)
+
+    def _drain_report(self) -> str:
+        """Name the stuck lanes (id, group, queued/in-flight counts)
+        so a wedged replica is identifiable from the exception
+        alone."""
+        parts = []
+        for r in self.replicas:
+            queued = r.queued
+            in_flight = r.load() - queued
+            if queued or in_flight > 0:
+                label = self._label_of.get(r.replica_id, "")
+                where = f" ({label})" if label else ""
+                parts.append(f"replica {r.replica_id}{where}: "
+                             f"queued={queued} in_flight={in_flight}")
+        if not parts:
+            parts.append("no replica reports load")
+        parts.append(f"releaser: released={self._releaser.released} "
+                     f"pending={self._releaser.pending} "
+                     f"submitted={self._seq}")
+        return "; ".join(parts)
 
     def close(self):
         for r in self.replicas:
@@ -558,11 +716,14 @@ class TriggerServingEngine(ShardedTriggerService):
     def __init__(self, infer_fn, *, microbatch: int, window_s: float = 1e-3,
                  queue_depth: int = 1024,
                  hedge_after_s: float | None = None, monitor=False,
-                 loop: str = "deadline"):
+                 loop: str = "deadline", faults=None, breaker=None,
+                 max_retries: int = 0, shed: bool = False):
         super().__init__(infer_fn, n_replicas=1, microbatch=microbatch,
                          window_s=window_s, queue_depth=queue_depth,
                          hedge_after_s=hedge_after_s, devices=None,
-                         monitor=monitor, loop=loop)
+                         monitor=monitor, loop=loop, faults=faults,
+                         breaker=breaker, max_retries=max_retries,
+                         shed=shed)
 
     @property
     def stats(self) -> ServingStats:

@@ -25,6 +25,15 @@ is split into
   dispatch   — batch assembly: fill-window residency after the pop,
                stacking/zero-padding, and device placement;
   compute    — the inference call itself (including any hedged retry).
+
+Fault tolerance (docs/serving.md): ``faults=`` wraps the replica's
+``infer_fn`` with a deterministic injector (``serving.faults``),
+``health=`` feeds a circuit breaker (``serving.health``) one outcome
+per batch, ``on_batch_failure=`` lets the service re-dispatch a failed
+batch's events to a healthy sibling before they fail to the client,
+and ``shed=`` plus a per-event deadline turn the blocking enqueue into
+fail-fast admission control (``ShedError``).  All four default off,
+reproducing the original behavior bit-for-bit.
 """
 from __future__ import annotations
 
@@ -42,6 +51,13 @@ import numpy as np
 # per-replica sliding window for latency/budget samples; counters stay
 # exact, percentiles reflect the most recent window.
 STAT_WINDOW = 65536
+
+
+class ShedError(RuntimeError):
+    """The service refused an event instead of blocking: its lane's
+    bounded queue was full under a shed policy, or its deadline
+    expired before dispatch.  Load-shedding admission control — the
+    client sees the rejection immediately and can drop or resubmit."""
 
 
 @dataclasses.dataclass
@@ -101,6 +117,13 @@ class ServingStats:
     batches: int = 0
     hedged: int = 0
     padded_events: int = 0
+    # fault-tolerance counters: events refused by admission control,
+    # events this replica accepted as failover retries, and events a
+    # failed batch handed off to a healthy sibling (all 0 on the
+    # healthy path).
+    shed: int = 0
+    retried: int = 0
+    failed_over: int = 0
     latencies_s: deque = dataclasses.field(default_factory=_stat_window)
     queue_wait_s: deque = dataclasses.field(default_factory=_stat_window)
     dispatch_s: deque = dataclasses.field(default_factory=_stat_window)
@@ -155,6 +178,9 @@ class ServingStats:
             "batches": self.batches,
             "hedged": self.hedged,
             "padded_events": self.padded_events,
+            "shed": self.shed,
+            "retried": self.retried,
+            "failed_over": self.failed_over,
             "p50_us": _pct(lat, 50) * 1e6 if lat else None,
             "p99_us": _pct(lat, 99) * 1e6 if lat else None,
             "mean_us": float(np.fromiter(lat, float).mean()) * 1e6
@@ -173,8 +199,8 @@ class InOrderReleaser:
     number ``k`` is only released once every ``j < k`` has been."""
 
     def __init__(self, on_release):
-        # on_release(outcome, timing, fut); outcome is ("ok", value) or
-        # ("err", exception).
+        # on_release(seq, outcome, timing, fut); outcome is
+        # ("ok", value) or ("err", exception).
         self._on_release = on_release
         self._next = 0
         self._held: dict[int, tuple] = {}
@@ -183,11 +209,16 @@ class InOrderReleaser:
 
     def complete(self, seq: int, outcome, timing: EventTiming, fut):
         with self._lock:
+            if seq < self._next:
+                # exactly-once backstop: a late duplicate (e.g. a buggy
+                # failover hook) must not park a stale entry in _held
+                # and wedge drain() forever.
+                return
             self._held[seq] = (outcome, timing, fut)
             while self._next in self._held:
                 out, tm, f = self._held.pop(self._next)
                 try:
-                    self._on_release(out, tm, f)
+                    self._on_release(self._next, out, tm, f)
                 except Exception:  # noqa: BLE001 — a client-cancelled
                     pass  # future (InvalidStateError) or a bad done-
                     #       callback must not wedge every later seq
@@ -211,8 +242,24 @@ class ReplicaEngine:
                  microbatch: int, window_s: float = 1e-3,
                  queue_depth: int = 1024, hedge_after_s: float | None = None,
                  device=None, replica_id: int = 0, inflight: int = 2,
-                 warmup_fn=None, monitor=None, truth_map=None):
-        self._infer = infer_fn
+                 warmup_fn=None, monitor=None, truth_map=None,
+                 faults=None, health=None, on_batch_failure=None,
+                 shed: bool = False):
+        # chaos wrapping happens here — before either loop flavor sees
+        # ``self._infer`` — so deadline and streaming dispatch inject
+        # at the same point.  ``health`` is this lane's ReplicaHealth
+        # (one outcome per batch); ``on_batch_failure(replica, items,
+        # exc) -> remaining`` is the service's failover hook; ``shed``
+        # turns a full queue into a fast ShedError instead of blocking.
+        self._faults = None
+        if faults is not None:
+            self._faults = faults.for_replica(replica_id)
+            self._infer = self._faults.wrap(infer_fn)
+        else:
+            self._infer = infer_fn
+        self._health = health
+        self._on_batch_failure = on_batch_failure
+        self.shed = bool(shed)
         self._releaser = releaser
         # optional per-replica TriggerMonitor: fed one record_batch per
         # completed micro-batch (vectorized, off the per-event path);
@@ -271,12 +318,32 @@ class ReplicaEngine:
         """Blocks when the bounded queue is full (the paper's limited
         buffer capacity -> backpressure on the client).  A close() that
         happens while we are blocked (or raced with the put) fails this
-        event's future instead of stranding it in a dead queue."""
+        event's future instead of stranding it in a dead queue.
+
+        With ``shed=True`` a full queue sheds the event immediately
+        (``ShedError``) instead of spinning; an event whose deadline
+        (stamped on the future by ``submit(deadline_s=)``) has already
+        expired is shed regardless of the policy."""
         with self._count_lock:
             self.stats.submitted += 1
             if self.stats.started_at is None:
                 self.stats.started_at = t_submit
         item = (seq, t_submit, event, fut)
+        dl = getattr(fut, "deadline", None)
+        if dl is not None and time.perf_counter() > dl:
+            self._shed_items([item], "deadline expired before enqueue")
+            return
+        if self.shed:
+            try:
+                self._q.put_nowait(item)
+            except queue.Full:
+                self._shed_items(
+                    [item], f"replica {self.replica_id} queue full "
+                            f"({self._q.maxsize} events)")
+                return
+            if self._stop.is_set():
+                self._fail_queued()   # put may have landed after close()
+            return
         placed = False
         while not placed and not self._stop.is_set():
             try:
@@ -289,11 +356,37 @@ class ReplicaEngine:
         elif self._stop.is_set():
             self._fail_queued()   # put may have landed after close()
 
+    def requeue(self, seq: int, t_submit: float, event: dict,
+                fut) -> bool:
+        """Failover intake: accept an event from another replica's
+        failed batch without ever blocking.  False (caller keeps
+        ownership of the event) when this lane is stopping or full."""
+        if self._stop.is_set():
+            return False
+        try:
+            self._q.put_nowait((seq, t_submit, event, fut))
+        except queue.Full:
+            return False
+        with self._count_lock:
+            self.stats.submitted += 1
+            self.stats.retried += 1
+            if self.stats.started_at is None:
+                self.stats.started_at = t_submit
+        if self._stop.is_set():
+            self._fail_queued()   # close() raced the put; still released
+        return True
+
     def load(self) -> int:
         """Events accepted but not yet released — the least-loaded
-        router's ranking signal."""
+        router's ranking signal.  Failed-over events were released by
+        a *different* replica, so they are subtracted here to keep the
+        signal from drifting."""
         return self.stats.submitted - self.stats.completed \
-            - self.stats.failed
+            - self.stats.failed - self.stats.failed_over
+
+    @property
+    def stopping(self) -> bool:
+        return self._stop.is_set()
 
     @property
     def queued(self) -> int:
@@ -312,6 +405,11 @@ class ReplicaEngine:
                 if items:
                     break
                 continue
+            dl = getattr(fut, "deadline", None)
+            if dl is not None and time.perf_counter() > dl:
+                self._shed_items([(seq, t_submit, event, fut)],
+                                 "deadline expired in queue")
+                continue
             items.append((seq, t_submit, time.perf_counter(), event, fut))
             if deadline is None:
                 deadline = time.perf_counter() + self.window
@@ -324,6 +422,17 @@ class ReplicaEngine:
             items = self._collect()
             if not items:
                 continue
+            if self._faults is not None \
+                    and self._faults.batcher_kill_due():
+                # chaos: the batcher thread dies mid-batch.  The
+                # collected items are failed exactly once first (a
+                # stranded future would hold every later seq hostage);
+                # later arrivals queue until close() sweeps them.
+                from repro.serving.faults import InjectedFault
+                self._resolve_err(items, InjectedFault(
+                    f"injected batcher kill "
+                    f"(replica {self.replica_id})"))
+                return
             # double buffering: hand the batch to the dispatch pool and
             # immediately go back to collecting the next one; the
             # semaphore bounds how many batches are in flight.
@@ -340,10 +449,22 @@ class ReplicaEngine:
         """Fail events that will never be dispatched — routed through
         the shared releaser so their sequence numbers still advance
         ``_next``; bypassing it would hold every later sequence (on any
-        replica) hostage forever.  Accepts both queue items
-        (seq, t_submit, event, fut) and collected items
+        replica) hostage forever."""
+        self._resolve_err(items, RuntimeError(
+            "serving replica closed before dispatch"))
+
+    def _shed_items(self, items, reason: str):
+        """Admission control: release refused events (full queue or
+        expired deadline) as ``ShedError`` — fail fast, never block,
+        sequence numbers still advance."""
+        with self._count_lock:
+            self.stats.shed += len(items)
+        self._resolve_err(items, ShedError(reason))
+
+    def _resolve_err(self, items, exc):
+        """Release every item as ``("err", exc)``.  Accepts both queue
+        items (seq, t_submit, event, fut) and collected items
         (seq, t_submit, t_collect, event, fut)."""
-        exc = RuntimeError("serving replica closed before dispatch")
         now = time.perf_counter()
         for it in items:
             seq, t_submit, fut = it[0], it[1], it[-1]
@@ -382,14 +503,10 @@ class ReplicaEngine:
         try:
             out = self._call(feeds)
         except Exception as exc:  # noqa: BLE001 — fault isolation: fail
-            t_done = time.perf_counter()   # the batch, not the replica
-            for seq, t_submit, t_collect, _, fut in items:
-                if self._truth_map is not None:
-                    self._truth_map.pop(seq, None)
-                timing = EventTiming(self.replica_id, t_submit, t_collect,
-                                     t_dispatch, t_done)
-                self._releaser.complete(seq, ("err", exc), timing, fut)
-            return
+            self._fail_batch(items, exc, t_dispatch)   # the batch, not
+            return                                     # the replica
+        if self._health is not None:
+            self._health.record_success()
         import jax
         leaves, tdef = jax.tree_util.tree_flatten(out)
         # materialize BEFORE stamping t_done: under jax async dispatch
@@ -419,10 +536,45 @@ class ReplicaEngine:
                                  t_dispatch, t_done)
             self._releaser.complete(seq, ("ok", res), timing, fut)
 
+    def _fail_batch(self, items, exc, t_dispatch):
+        """Batch-failure path: feed the breaker, offer the events to
+        the service's failover hook (bounded re-dispatch to a healthy
+        sibling in the same group), then fail whatever could not be
+        moved — each event is released exactly once either way."""
+        if self._health is not None:
+            self._health.record_failure()
+        remaining = items
+        if self._on_batch_failure is not None:
+            try:
+                remaining = self._on_batch_failure(self, items, exc)
+            except Exception:  # noqa: BLE001 — a broken hook must not
+                remaining = items  # strand the batch
+        moved = len(items) - len(remaining)
+        if moved:
+            with self._count_lock:
+                self.stats.failed_over += moved
+        if not remaining:
+            return
+        t_done = time.perf_counter()
+        for seq, t_submit, t_collect, _, fut in remaining:
+            if self._truth_map is not None:
+                self._truth_map.pop(seq, None)
+            timing = EventTiming(self.replica_id, t_submit, t_collect,
+                                 t_dispatch, t_done)
+            self._releaser.complete(seq, ("err", exc), timing, fut)
+
     def _call(self, feeds):
         if self.hedge_after is None:
             return self._infer(feeds)
-        primary = self._hedge_pool.submit(self._infer, feeds)
+        # a close() can race an in-flight dispatch: the hedge pool is
+        # already shut down and submit() raises RuntimeError.  Route
+        # that to the batch-failure path (clean per-batch failure)
+        # instead of leaking an unresolved future.
+        try:
+            primary = self._hedge_pool.submit(self._infer, feeds)
+        except RuntimeError as exc:
+            raise RuntimeError(
+                "hedge pool shut down during dispatch") from exc
         try:
             return primary.result(timeout=self.hedge_after)
         except FuturesTimeout:
@@ -433,8 +585,11 @@ class ReplicaEngine:
         # re-dispatch to the backup lane and take whichever lane
         # returns first (duplicate-safe because inference is pure);
         # a lane that *fails* defers to the other one.
-        backup = self._hedge_pool.submit(self._infer, feeds)
-        lanes = {primary, backup}
+        try:
+            backup = self._hedge_pool.submit(self._infer, feeds)
+        except RuntimeError:
+            backup = None   # closing: ride the primary out alone
+        lanes = {primary, backup} if backup is not None else {primary}
         last_exc = None
         while lanes:
             done, lanes = futures_wait(lanes, return_when=FIRST_COMPLETED)

@@ -74,7 +74,9 @@ class StreamingReplicaEngine(ReplicaEngine):
                  window_s: float = 1e-3, queue_depth: int = 1024,
                  hedge_after_s: float | None = None, device=None,
                  replica_id: int = 0, inflight: int = 2,
-                 warmup_fn=None, monitor=None, truth_map=None):
+                 warmup_fn=None, monitor=None, truth_map=None,
+                 faults=None, health=None, on_batch_failure=None,
+                 shed: bool = False):
         if hedge_after_s is not None:
             raise ValueError(
                 "hedge_after_s is a deadline-loop feature; the "
@@ -87,7 +89,9 @@ class StreamingReplicaEngine(ReplicaEngine):
                          hedge_after_s=None, device=device,
                          replica_id=replica_id, inflight=inflight,
                          warmup_fn=warmup_fn, monitor=monitor,
-                         truth_map=truth_map)
+                         truth_map=truth_map, faults=faults,
+                         health=health,
+                         on_batch_failure=on_batch_failure, shed=shed)
 
     # ------------------------------------------------------------- setup ----
     def _setup_loop(self):
@@ -120,6 +124,21 @@ class StreamingReplicaEngine(ReplicaEngine):
                 seq, t_submit, event, fut = self._q.get(timeout=_POLL_S)
             except queue.Empty:
                 continue
+            dl = getattr(fut, "deadline", None)
+            if dl is not None and time.perf_counter() > dl:
+                self._shed_items([(seq, t_submit, event, fut)],
+                                 "deadline expired in queue")
+                continue
+            if self._faults is not None \
+                    and self._faults.batcher_kill_due():
+                # chaos: the launcher dies mid-batch; the popped event
+                # is failed exactly once, close() sweeps the rest.
+                from repro.serving.faults import InjectedFault
+                self._resolve_err([(seq, t_submit, event, fut)],
+                                  InjectedFault(
+                                      f"injected launcher kill "
+                                      f"(replica {self.replica_id})"))
+                return
             staged = [(seq, t_submit, time.perf_counter(), event, fut)]
             acquired = False
             while not (acquired := self._inflight_sem.acquire(
@@ -135,6 +154,11 @@ class StreamingReplicaEngine(ReplicaEngine):
                     s, t, ev, f = self._q.get_nowait()
                 except queue.Empty:
                     break
+                dl = getattr(f, "deadline", None)
+                if dl is not None and now > dl:
+                    self._shed_items([(s, t, ev, f)],
+                                     "deadline expired in queue")
+                    continue
                 staged.append((s, t, now, ev, f))
             try:
                 self._launch(staged)
@@ -253,14 +277,12 @@ class StreamingReplicaEngine(ReplicaEngine):
         try:
             out = self._poll_result(rec["fut"])
         except Exception as exc:  # noqa: BLE001 — fault isolation: fail
-            t_done = time.perf_counter()   # the launch, not the lane
-            for seq, t_submit, t_collect, _, fut in items:
-                if self._truth_map is not None:
-                    self._truth_map.pop(seq, None)
-                timing = EventTiming(self.replica_id, t_submit, t_collect,
-                                     rec["t_dispatch"], t_done)
-                self._releaser.complete(seq, ("err", exc), timing, fut)
+            # the launch, not the lane; breaker + failover as in the
+            # deadline loop's batch-failure path
+            self._fail_batch(items, exc, rec["t_dispatch"])
             return
+        if self._health is not None:
+            self._health.record_success()
         import jax
         leaves, tdef = jax.tree_util.tree_flatten(out)
         host = self._to_host_ring(leaves)

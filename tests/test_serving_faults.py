@@ -1,0 +1,490 @@
+"""Fault-tolerant serving: deterministic fault injection, breaker
+state machine, health-aware routing, failover re-dispatch, load
+shedding, and shutdown-under-load — the chaos suite.
+
+CI runs this file under several ``REPRO_CHAOS_SEED`` values (the
+``chaos`` job's seed matrix), so the invariants below hold against
+more than one deterministic failure schedule, not one lucky seed."""
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.serving import (BreakerConfig, FaultPlan, FaultSpec,
+                           InjectedFault, ReplicaHealth, Router,
+                           ShardedTriggerService, ShedError,
+                           pick_bucket, pick_bucket_sorted)
+
+SEED = int(os.environ.get("REPRO_CHAOS_SEED", "0"))
+
+
+def _echo(feeds):
+    return {"y": feeds["x"]}
+
+
+def _echo_slow(delay):
+    def infer(feeds):
+        time.sleep(delay)
+        return {"y": feeds["x"]}
+    return infer
+
+
+def _ev(i):
+    return {"x": np.float32(i)}
+
+
+def _svc(infer, **kw):
+    kw.setdefault("microbatch", 1)
+    kw.setdefault("window_s", 1e-3)
+    kw.setdefault("devices", None)
+    return ShardedTriggerService(infer, **kw)
+
+
+# ------------------------------------------------------ FaultPlan spec ----
+def test_fault_plan_parse_roundtrip():
+    plan = FaultPlan.parse(
+        "fail@3;stall:p=0.05,s=0.02;wedge:replica=1+2;corrupt:p=0.01;"
+        "kill@0,7;seed=9")
+    assert plan.seed == 9
+    kinds = [s.kind for s in plan.specs]
+    assert kinds == ["fail", "stall", "wedge", "corrupt", "kill"]
+    assert plan.specs[0].at == (3,)
+    assert plan.specs[1].rate == 0.05
+    assert plan.specs[1].duration_s == 0.02
+    assert plan.specs[2].replicas == (1, 2)
+    assert plan.specs[4].at == (0, 7)
+    # describe() re-parses to the same plan
+    again = FaultPlan.parse(plan.describe())
+    assert again.seed == plan.seed
+    assert [s.describe() for s in again.specs] \
+        == [s.describe() for s in plan.specs]
+
+
+def test_fault_spec_validation():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultSpec("explode")
+    with pytest.raises(ValueError, match="rate"):
+        FaultSpec("fail", rate=1.5)
+    with pytest.raises(ValueError, match="index-triggered"):
+        FaultSpec("kill", rate=0.1)
+    with pytest.raises(ValueError, match="unknown fault-spec key"):
+        FaultPlan.parse("fail:q=0.1")
+
+
+def test_injector_replay_is_bit_identical():
+    """Same (seed, replica) -> the same decision log; different
+    replicas of one plan draw independent streams."""
+    spec = "fail:p=0.3;stall:p=0.2,s=0.0;corrupt:p=0.1"
+    a = FaultPlan.parse(spec, seed=SEED).for_replica(0)
+    b = FaultPlan.parse(spec, seed=SEED).for_replica(0)
+    fa, fb = a.wrap(_echo), b.wrap(_echo)
+    for i in range(200):
+        for f in (fa, fb):
+            try:
+                f(_ev(i))
+            except InjectedFault:
+                pass
+    assert a.log == b.log and len(a.log) > 0
+    assert a.counts == b.counts
+    other = FaultPlan.parse(spec, seed=SEED).for_replica(1)
+    fo = other.wrap(_echo)
+    for i in range(200):
+        try:
+            fo(_ev(i))
+        except InjectedFault:
+            pass
+    assert other.log != a.log
+
+
+def test_fail_at_exact_batch_index():
+    """``fail@1`` with a serialized lane fails exactly batch 1."""
+    plan = FaultPlan.parse("fail@1", seed=SEED)
+    svc = _svc(_echo, n_replicas=1, inflight=1, faults=plan)
+    outcomes = []
+    for i in range(3):   # one event per batch (microbatch=1)
+        f = svc.submit(_ev(i))
+        try:
+            f.result(timeout=30)
+            outcomes.append("ok")
+        except InjectedFault:
+            outcomes.append("fail")
+    svc.drain()
+    assert outcomes == ["ok", "fail", "ok"]
+    assert plan.counts()["fail"] == 1
+    svc.close()
+
+
+def test_stall_injects_latency():
+    plan = FaultPlan.parse("stall@0:s=0.25", seed=SEED)
+    svc = _svc(_echo, n_replicas=1, inflight=1, faults=plan)
+    t0 = time.perf_counter()
+    assert float(svc.submit(_ev(1)).result(timeout=30)["y"]) == 1.0
+    assert time.perf_counter() - t0 >= 0.25
+    svc.drain()
+    svc.close()
+
+
+def test_corrupt_poisons_output():
+    plan = FaultPlan.parse("corrupt@0", seed=SEED)
+    svc = _svc(lambda feeds: {"y": feeds["x"],
+                              "trig": feeds["x"] > 100.0},
+               n_replicas=1, inflight=1, faults=plan)
+    bad = svc.submit(_ev(1)).result(timeout=30)
+    good = svc.submit(_ev(1)).result(timeout=30)
+    svc.drain()
+    assert np.isnan(np.asarray(bad["y"])).all()
+    assert np.asarray(bad["trig"]).all()     # bools poisoned to True
+    assert float(good["y"]) == 1.0           # only batch 0 corrupted
+    svc.close()
+
+
+def test_wedge_blocks_until_released():
+    plan = FaultPlan.parse("wedge@0", seed=SEED)
+    svc = _svc(_echo, n_replicas=1, faults=plan)
+    fut = svc.submit(_ev(7))
+    for _ in range(200):                     # wait for the hang
+        if plan.wedged:
+            break
+        time.sleep(0.01)
+    assert plan.wedged == 1
+    assert not fut.done()
+    # the wedge names the stuck lane in the drain diagnostics
+    with pytest.raises(TimeoutError, match=r"replica 0.*in_flight"):
+        svc.drain(timeout=0.3)
+    plan.release()
+    assert float(fut.result(timeout=30)["y"]) == 7.0
+    svc.drain()
+    assert plan.wedged == 0
+    svc.close()
+
+
+def test_wedge_duration_cap_self_releases():
+    plan = FaultPlan.parse("wedge@0:s=0.1", seed=SEED)
+    svc = _svc(_echo, n_replicas=1, faults=plan)
+    t0 = time.perf_counter()
+    assert float(svc.submit(_ev(3)).result(timeout=30)["y"]) == 3.0
+    assert time.perf_counter() - t0 >= 0.1
+    assert not plan.released                 # no manual release needed
+    svc.drain()
+    svc.close()
+
+
+# ------------------------------------------------- breaker state machine ----
+class _Clock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def test_breaker_trips_probes_and_closes():
+    clk = _Clock()
+    h = ReplicaHealth(0, BreakerConfig(fail_threshold=3, open_s=0.25),
+                      clock=clk)
+    assert h.state() == "closed" and h.available()
+    h.record_failure()
+    h.record_failure()
+    assert h.state() == "closed"             # below the threshold
+    h.record_failure()
+    assert h.state() == "open" and not h.available()
+    assert h.trips == 1
+    clk.t = 0.3                              # cool-down expires
+    assert h.state() == "half_open"
+    assert h.available()                     # one probe token
+    h.note_dispatch()
+    assert not h.available()                 # token consumed
+    h.record_success()
+    assert h.state() == "closed" and h.available()
+    assert h.snapshot()["consecutive_failures"] == 0
+
+
+def test_breaker_reopen_backs_off_exponentially():
+    clk = _Clock()
+    cfg = BreakerConfig(fail_threshold=1, open_s=0.25, backoff=2.0,
+                        max_open_s=0.8)
+    h = ReplicaHealth(0, cfg, clock=clk)
+    h.record_failure()                       # trip: cooldown 0.25
+    assert h.snapshot()["cooldown_s"] == pytest.approx(0.25)
+    clk.t = 0.3
+    assert h.state() == "half_open"
+    h.record_failure()                       # probe fails: 0.5
+    assert h.state() == "open"
+    assert h.snapshot()["cooldown_s"] == pytest.approx(0.5)
+    clk.t = 0.9
+    assert h.state() == "half_open"
+    h.record_failure()                       # 1.0 capped to 0.8
+    assert h.snapshot()["cooldown_s"] == pytest.approx(0.8)
+    assert h.trips == 3
+
+
+def test_breaker_ewma_trip_without_consecutive_failures():
+    clk = _Clock()
+    cfg = BreakerConfig(fail_threshold=100, ewma_alpha=0.5,
+                        ewma_threshold=0.5, min_samples=4)
+    h = ReplicaHealth(0, cfg, clock=clk)
+    for _ in range(3):                       # F S F S ... rate ~0.5
+        h.record_failure()
+        h.record_success()
+    h.record_failure()
+    assert h.state() == "open"               # EWMA tripped it
+    assert h.snapshot()["consecutive_failures"] < 100
+
+
+# ----------------------------------------------------- health-aware pick ----
+class _FakeReplica:
+    def __init__(self, replica_id, load=0):
+        self.replica_id = replica_id
+        self._load = load
+
+    def load(self):
+        return self._load
+
+
+def _tripped(rid, clk):
+    h = ReplicaHealth(rid, BreakerConfig(fail_threshold=1), clock=clk)
+    h.record_failure()
+    return h
+
+
+def test_router_skips_open_lane():
+    clk = _Clock()
+    reps = [_FakeReplica(0), _FakeReplica(1)]
+    healths = {0: ReplicaHealth(0, BreakerConfig(), clock=clk),
+               1: _tripped(1, clk)}
+    for policy in ("round_robin", "least_loaded"):
+        r = Router(reps, policy, healths=healths)
+        assert [r.pick(s).replica_id for s in range(6)] == [0] * 6
+
+
+def test_router_least_bad_when_all_open():
+    clk = _Clock()
+    h0, h1 = _tripped(0, clk), _tripped(1, clk)
+    h1.record_failure()                      # lane 1 is sicker
+    r = Router([_FakeReplica(0), _FakeReplica(1)], "round_robin",
+               healths={0: h0, 1: h1})
+    # every breaker open: the stream keeps flowing to the least-bad lane
+    assert [r.pick(s).replica_id for s in range(4)] == [0] * 4
+
+
+def test_router_without_healths_unchanged():
+    reps = [_FakeReplica(0, load=5), _FakeReplica(1, load=1)]
+    assert Router(reps, "round_robin").pick(3).replica_id == 1
+    assert Router(reps, "least_loaded").pick(0).replica_id == 1
+
+
+# ------------------------------------------------- failover re-dispatch ----
+def test_failover_rescues_dead_replica_traffic():
+    plan = FaultPlan.parse("fail:p=1.0,replica=1", seed=SEED)
+    svc = _svc(_echo, n_replicas=2, microbatch=2, faults=plan,
+               breaker=True, max_retries=2)
+    futs = [svc.submit(_ev(i)) for i in range(24)]
+    results = [f.result(timeout=60) for f in futs]   # nothing raises
+    svc.drain()
+    for i, r in enumerate(results):
+        assert float(r["y"]) == float(i)
+    s = svc.stats.summary()
+    assert s["retried"] > 0 and s["failed_over"] > 0
+    assert s["retried"] == s["failed_over"]
+    ft = svc.fault_tolerance_summary()
+    assert ft["breaker"]["enabled"]
+    assert svc.healths[1].trips >= 1
+    svc.close()
+
+
+def test_retry_budget_bounds_all_dead_fleet():
+    """Every lane dead: retries stay bounded, every future resolves
+    with the injected error instead of ping-ponging forever."""
+    plan = FaultPlan.parse("fail:p=1.0", seed=SEED)
+    svc = _svc(_echo, n_replicas=2, faults=plan, breaker=True,
+               max_retries=1)
+    futs = [svc.submit(_ev(i)) for i in range(8)]
+    for f in futs:
+        assert isinstance(f.exception(timeout=60), InjectedFault)
+    svc.drain()
+    # each event dispatched at most 1 + max_retries times
+    assert svc.stats.summary()["retried"] <= 8 * 1
+    svc.close()
+
+
+# -------------------------------------------------------- load shedding ----
+def test_shed_on_full_queue():
+    svc = _svc(_echo_slow(0.05), n_replicas=1, queue_depth=1,
+               inflight=1, shed=True)
+    futs = [svc.submit(_ev(i)) for i in range(12)]
+    shed = ok = 0
+    for f in futs:
+        exc = f.exception(timeout=60)
+        if exc is None:
+            ok += 1
+        else:
+            assert isinstance(exc, ShedError)
+            assert "queue full" in str(exc)
+            shed += 1
+    svc.drain()
+    assert shed > 0 and ok > 0 and shed + ok == 12
+    assert svc.stats.summary()["shed"] == shed
+    svc.close()
+
+
+def test_deadline_expired_event_is_shed():
+    svc = _svc(_echo, n_replicas=1)
+    late = svc.submit(_ev(0), deadline_s=0.0)
+    on_time = svc.submit(_ev(1), deadline_s=30.0)
+    assert isinstance(late.exception(timeout=30), ShedError)
+    assert "deadline" in str(late.exception())
+    assert float(on_time.result(timeout=30)["y"]) == 1.0
+    svc.drain()
+    assert svc.stats.summary()["shed"] == 1
+    svc.close()
+
+
+def test_healthy_path_counters_stay_zero():
+    """No faults, no breaker: the new ledgers read zero and the
+    original counters are untouched."""
+    svc = _svc(_echo, n_replicas=2, microbatch=2)
+    futs = [svc.submit(_ev(i)) for i in range(16)]
+    for f in futs:
+        f.result(timeout=30)
+    svc.drain()
+    s = svc.stats.summary()
+    assert s["completed"] == 16
+    assert s["shed"] == s["retried"] == s["failed_over"] == 0
+    ft = svc.fault_tolerance_summary()
+    assert not ft["breaker"]["enabled"]
+    assert ft["breaker"]["states"] == {}
+    svc.close()
+
+
+def test_monitor_snapshot_carries_fault_counters():
+    plan = FaultPlan.parse("fail:p=1.0,replica=1", seed=SEED)
+    svc = _svc(_echo, n_replicas=2, faults=plan, breaker=True,
+               max_retries=2, monitor=True)
+    futs = [svc.submit(_ev(i)) for i in range(8)]
+    for f in futs:
+        f.result(timeout=60)
+    svc.drain()
+    snap = svc.monitor_snapshot()
+    serving = snap["serving"]
+    assert serving["retried"] > 0
+    assert serving["max_retries"] == 2
+    assert set(serving["breaker"]["states"]) == {"0", "1"}
+    svc.close()
+
+
+# -------------------------------------------------- shutdown under load ----
+def _resolution_ledger(futs):
+    counts = [0] * len(futs)
+    lock = threading.Lock()
+
+    def make(i):
+        def cb(_f):
+            with lock:
+                counts[i] += 1
+        return cb
+
+    for i, f in enumerate(futs):
+        f.add_done_callback(make(i))
+    return counts
+
+
+def test_close_with_hedged_batches_in_flight():
+    svc = _svc(_echo_slow(0.08), n_replicas=2, microbatch=2,
+               hedge_after_s=0.01)
+    futs = [svc.submit(_ev(i)) for i in range(12)]
+    counts = _resolution_ledger(futs)
+    time.sleep(0.05)                          # hedges are now in flight
+    svc.close()
+    assert all(f.done() for f in futs)
+    assert counts == [1] * 12                 # exactly-once resolution
+
+
+def test_hedge_pool_shutdown_race_fails_batch_cleanly():
+    """The close()-vs-dispatch race: a hedge submit into a shut-down
+    pool becomes a per-batch failure, never an unresolved future."""
+    svc = _svc(_echo, n_replicas=1, hedge_after_s=0.05)
+    svc.replicas[0]._hedge_pool.shutdown(wait=False)
+    fut = svc.submit(_ev(0))
+    exc = fut.exception(timeout=30)
+    assert isinstance(exc, RuntimeError)
+    assert "hedge pool shut down" in str(exc)
+    svc.close()
+
+
+@pytest.mark.parametrize("loop", ["deadline", "streaming"])
+def test_batcher_killed_mid_batch(loop):
+    """``kill@0`` murders the batcher/launcher thread at its first
+    checkpoint: the collected batch fails exactly once, queued events
+    resolve at close, nothing deadlocks."""
+    plan = FaultPlan.parse("kill@0", seed=SEED)
+    svc = _svc(_echo, n_replicas=1, microbatch=4, faults=plan,
+               loop=loop)
+    futs = [svc.submit(_ev(i)) for i in range(4)]
+    counts = _resolution_ledger(futs)
+    assert isinstance(futs[0].exception(timeout=30), InjectedFault)
+    svc.close()                               # resolves any stragglers
+    assert all(f.done() for f in futs)
+    assert counts == [1] * 4
+    assert plan.counts()["kill"] == 1
+
+
+def test_streaming_failover_rescues_dead_replica():
+    plan = FaultPlan.parse("fail:p=1.0,replica=1", seed=SEED)
+    svc = _svc(_echo, n_replicas=2, microbatch=2, loop="streaming",
+               faults=plan, breaker=True, max_retries=2)
+    futs = [svc.submit(_ev(i)) for i in range(24)]
+    for i, f in enumerate(futs):
+        assert float(f.result(timeout=60)["y"]) == float(i)
+    svc.drain()
+    assert svc.stats.summary()["failed_over"] > 0
+    svc.close()
+
+
+# ------------------------------------------------------- bucket helpers ----
+def test_pick_bucket_sorted_matches_pick_bucket():
+    buckets = (8, 32, 128)
+    for occ in (0, 1, 8, 9, 32, 33, 128, 4096):
+        assert pick_bucket_sorted(occ, buckets) \
+            == pick_bucket(occ, buckets)
+
+
+# ------------------------------------------------------ chaos invariant ----
+def test_chaos_invariant_exactly_once_in_order():
+    """The CI-gated invariant: 10% transient failures on every lane
+    plus one hard-dead replica of four — every event resolves exactly
+    once, releases in submission order, the overwhelming majority
+    succeed via failover, and the service drains without deadlock."""
+    n = 240
+    plan = FaultPlan.parse("fail:p=0.1;fail:p=1.0,replica=3",
+                           seed=SEED)
+    svc = _svc(_echo_slow(0.002), n_replicas=4, microbatch=4,
+               window_s=2e-3, faults=plan, breaker=True, max_retries=3)
+    order, lock = [], threading.Lock()
+    futs = []
+
+    def track(i):
+        def cb(_f):
+            with lock:
+                order.append(i)
+        return cb
+
+    for i in range(n):
+        f = svc.submit(_ev(i))
+        f.add_done_callback(track(i))
+        futs.append(f)
+    done = [f.exception(timeout=120) for f in futs]
+    svc.drain(timeout=60)
+    ok = sum(1 for e in done if e is None)
+    assert len(order) == n                      # exactly-once
+    assert order == sorted(order)               # submission order
+    assert svc._releaser.released == n
+    assert ok >= int(0.85 * n)                  # failover absorbs faults
+    for e in done:
+        assert e is None or isinstance(e, InjectedFault)
+    assert svc.healths[3].trips >= 1            # dead lane tripped
+    s = svc.stats.summary()
+    assert s["completed"] == ok
+    assert s["retried"] >= s["failed_over"] > 0
+    svc.close()

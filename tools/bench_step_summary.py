@@ -100,6 +100,23 @@ def _monitoring_rows(d: dict) -> list[tuple[str, object]]:
              f"{100 * d['overhead_frac']:.2f}%")]
 
 
+def _faults_rows(d: dict) -> list[tuple[str, object]]:
+    deg = d["degradation"]
+    tot = d["totals"]
+    chk = d["check"]
+    return [
+        ("healthy / one-dead ok-throughput (ev/s)",
+         f"{deg['healthy_ok_ev_s']:,.0f} / {deg['one_dead_ok_ev_s']:,.0f}"),
+        ("degradation ratio (gate ≥ %.2f)" % chk["min_dead_ratio"],
+         f"{deg['ratio']:.2f}"),
+        ("shed / retried / failed-over",
+         f"{tot['shed']} / {tot['retried']} / {tot['failed_over']}"),
+        ("breaker trips", str(tot["breaker_trips"])),
+        ("exactly-once", bool(chk["exactly_once"])),
+        ("chaos gate", bool(chk["pass"])),
+    ]
+
+
 def _multimodel_rows(d: dict) -> list[tuple[str, object]]:
     rows: list[tuple[str, object]] = [
         (f"route {name}: completed / batches",
@@ -119,6 +136,7 @@ _HEADLINES = {
     "BENCH_fusion.json": _fusion_rows,
     "BENCH_monitoring.json": _monitoring_rows,
     "BENCH_multimodel.json": _multimodel_rows,
+    "BENCH_faults.json": _faults_rows,
 }
 
 
